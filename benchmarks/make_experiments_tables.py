@@ -1,0 +1,119 @@
+"""Regenerate the EXPERIMENTS.md roofline tables from the dry-run JSONL
+artifacts.  Usage: PYTHONPATH=src python -m benchmarks.make_experiments_tables
+prints markdown to stdout."""
+
+import json
+import os
+
+
+def load(fname):
+    if not os.path.exists(fname):
+        return []
+    return [json.loads(l) for l in open(fname)]
+
+
+def fmt_s(x):
+    return f"{x:.4f}" if x >= 1e-4 else f"{x:.2e}"
+
+
+def lever(r) -> str:
+    """One sentence per cell: what would move the dominant term down."""
+    dom, shape, arch = r["dominant"], r["shape"], r["arch"]
+    moe = arch in ("dbrx-132b", "llama4-scout-17b-a16e", "jamba-1.5-large-398b")
+    if dom == "memory" and "decode" in shape or "long" in shape:
+        if arch == "gemma2-2b":
+            return ("ring-buffer the local-layer KV (window 4096 of 32768) "
+                    "to cut half the layers' cache reads 8x")
+        if arch == "mamba2-370m":
+            return ("batch=1 reads all weights per token: decode batching "
+                    "or weight int8 is the only lever")
+        return ("KV/param reads dominate: int8 KV cache and larger decode "
+                "batch per weight read")
+    if dom == "memory":
+        return ("fp32 attention probs + remat re-reads: flash-attention "
+                "kernel (fused softmax, no S^2 materialization) and "
+                "selective remat")
+    if dom == "collective":
+        if moe:
+            return ("EP dispatch + Megatron residual all-reduce: sequence-"
+                    "parallel residual (seq=model override) converts AR to "
+                    "RS+AG; overlap all-to-all with expert GEMMs")
+        return ("Megatron residual all-reduce per layer: sequence-parallel "
+                "residual halves it")
+    return "compute-bound: raise MXU utilization (larger tiles, bf16)"
+
+
+def table(rows, n_dev):
+    out = ["| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| frac | MODEL_TFLOPs | useful | peak GB | lever |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        model_tflops = (r["useful_flops_ratio"] * r["compute_s"] * 197e12
+                        * n_dev / 1e12)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"{r['dominant']} | {r['roofline_fraction']:.3f} | "
+            f"{model_tflops:.1f} | "
+            f"{r['useful_flops_ratio']:.3f} | {r['peak_gb']:.2f} | "
+            f"{lever(r)} |")
+    return "\n".join(out)
+
+
+def coll_table(rows):
+    out = ["| arch | shape | all-gather | all-reduce | all-to-all | permute | total GB/dev |",
+           "|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: -(r["coll_detail"]["total"])):
+        d = r["coll_detail"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {d['all-gather'] / 1e9:.2f} | "
+            f"{d['all-reduce'] / 1e9:.2f} | {d['all-to-all'] / 1e9:.2f} | "
+            f"{d['collective-permute'] / 1e9:.2f} | {d['total'] / 1e9:.2f} |")
+    return "\n".join(out)
+
+
+def opt_compare_table():
+    base = {(r["arch"], r["shape"]): r for r in load("dryrun_16x16.jsonl")}
+    opt = {(r["arch"], r["shape"]): r for r in load("dryrun_16x16_opt.jsonl")}
+    if not opt:
+        return None
+    out = ["| arch | shape | baseline bound s | optimized bound s | speedup "
+           "| collective: base → opt |",
+           "|---|---|---|---|---|---|"]
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        b, o = base[key], opt[key]
+        bb = max(b["compute_s"], b["memory_s"], b["collective_s"])
+        ob = max(o["compute_s"], o["memory_s"], o["collective_s"])
+        out.append(
+            f"| {key[0]} | {key[1]} | {fmt_s(bb)} | {fmt_s(ob)} | "
+            f"{bb / max(ob, 1e-30):.2f}x | "
+            f"{fmt_s(b['collective_s'])} → {fmt_s(o['collective_s'])} |")
+    return "\n".join(out)
+
+
+def main():
+    for mesh, fname, n_dev in (
+            ("16x16 (single pod, 256 chips)", "dryrun_16x16.jsonl", 256),
+            ("2x16x16 (two pods, 512 chips)", "dryrun_2x16x16.jsonl", 512)):
+        rows = load(fname)
+        if not rows:
+            continue
+        print(f"\n### Mesh {mesh} — {len(rows)} cells\n")
+        print(table(rows, n_dev))
+        if "16x16 (single" in mesh:
+            print("\n#### Collective traffic per device (single pod)\n")
+            print(coll_table(rows[:]))
+    cmp_tbl = opt_compare_table()
+    if cmp_tbl:
+        print("\n### Paper-faithful baseline vs beyond-paper optimized "
+              "(16x16, all cells)\n")
+        print("Optimized = `--override moe=shard_map --override attn=chunked "
+              "--override seq=model --kv-quant --kv-ring` (every §Perf lever "
+              "on; baselines unchanged above).\n")
+        print(cmp_tbl)
+
+
+if __name__ == "__main__":
+    main()

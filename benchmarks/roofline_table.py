@@ -1,0 +1,43 @@
+"""Roofline table benchmark: reads the dry-run JSONL artifacts (written by
+``python -m repro.launch.dryrun --all --json ...``) and emits one row per
+(arch x shape x mesh) cell.  The dry-run itself needs 512 host devices so
+it must run in its own process; this reader keeps benchmarks/run.py
+single-device."""
+
+from __future__ import annotations
+
+import json
+import os
+
+FILES = {
+    "16x16": "dryrun_16x16.jsonl",
+    "2x16x16": "dryrun_2x16x16.jsonl",
+}
+
+
+def roofline(quick: bool = False):
+    rows = []
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    found = False
+    for mesh, fname in FILES.items():
+        path = os.path.join(root, fname)
+        if not os.path.exists(path):
+            continue
+        found = True
+        with open(path) as f:
+            for line in f:
+                r = json.loads(line)
+                bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+                rows.append((
+                    f"roofline/{r['arch']}/{r['shape']}@{r['mesh']}",
+                    bound * 1e6,
+                    f"dom={r['dominant']};frac={r['roofline_fraction']:.3f};"
+                    f"compute_s={r['compute_s']:.4f};"
+                    f"memory_s={r['memory_s']:.4f};"
+                    f"collective_s={r['collective_s']:.4f};"
+                    f"useful={r['useful_flops_ratio']:.3f};"
+                    f"peak_gb={r['peak_gb']:.2f}"))
+    if not found:
+        rows.append(("roofline/missing", 0.0,
+                     "run python -m repro.launch.dryrun --all --json first"))
+    return rows

@@ -1,0 +1,62 @@
+"""Benchmark harness: one function per paper table/figure (+ kernels +
+roofline).  Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only substr]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks.kernels_bench import kernels
+    from benchmarks.paper_tables import (
+        fig2_sleep_cpu,
+        fig5_vacation_pdf,
+        fig7_tl_sweep,
+        fig8_m_sweep,
+        fig11_adaptation,
+        fig12_dpdk_compare,
+        fig15_applications,
+        table1_sleep_precision,
+        table2_vbar_tuning,
+        table3_nanosleep_loss,
+    )
+    from benchmarks.roofline_table import roofline
+
+    suites = [
+        table1_sleep_precision, fig2_sleep_cpu, fig5_vacation_pdf,
+        table2_vbar_tuning, fig7_tl_sweep, fig8_m_sweep,
+        table3_nanosleep_loss, fig11_adaptation, fig12_dpdk_compare,
+        fig15_applications, kernels, roofline,
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for suite in suites:
+        if args.only and args.only not in suite.__name__:
+            continue
+        t0 = time.time()
+        try:
+            for name, us, derived in suite(quick=args.quick):
+                print(f"{name},{us:.3f},{derived}")
+        except Exception as e:  # keep the harness going; report at exit
+            failures += 1
+            print(f"{suite.__name__}/ERROR,0,{type(e).__name__}:{e}",
+                  file=sys.stderr)
+        sys.stdout.flush()
+        print(f"# {suite.__name__} done in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

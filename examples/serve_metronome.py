@@ -1,0 +1,90 @@
+"""End-to-end serving driver (the paper's experiment, serving edition):
+a token-generation service under Poisson request load, comparing
+Metronome sleep&wake retrieval against the busy-poll baseline.
+
+Reports the paper's metrics: host CPU fraction, time-to-first-token,
+retrieval latency, completed requests — at several offered rates.
+
+  PYTHONPATH=src python examples/serve_metronome.py [--requests 30]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import MetronomeConfig
+from repro.models import Model
+from repro.serving import (
+    BusyPollServer,
+    EngineConfig,
+    InferenceEngine,
+    MetronomeServer,
+    Request,
+)
+
+TINY = dataclasses.replace(
+    get_config("gemma-2b").reduced(), n_layers=2, d_model=32,
+    n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64, vocab_size=211)
+
+
+def make_engine():
+    model = Model(TINY)
+    params = model.init(jax.random.PRNGKey(0), max_seq=64)
+    eng = InferenceEngine(model, params,
+                          EngineConfig(max_slots=4, max_len=64,
+                                       prefill_buckets=(8,)))
+    warm = Request(prompt=[1, 2], max_new_tokens=2)
+    eng.submit([warm])
+    eng.pump()
+    return eng
+
+
+def drive(server, n_req, rate_hz, rng):
+    reqs = []
+    for i in range(n_req):
+        r = Request(prompt=[(i % 200) + 1, (i % 200) + 2], max_new_tokens=6)
+        server.submit(r)
+        reqs.append(r)
+        time.sleep(rng.exponential(1.0 / rate_hz))      # Poisson arrivals
+    ok = all(r.wait(30.0) for r in reqs)
+    st = server.stop()
+    ttft = np.median([(r.first_token_ns - r.arrival_ns) / 1e6 for r in reqs])
+    return dict(ok=ok, cpu=st.cpu_fraction, ttft_ms=float(ttft),
+                retr_us=float(np.median(st.retrieval_lat_us))
+                if st.retrieval_lat_us else 0.0,
+                busy_tries=st.busy_tries, wakeups=st.wakeups)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=30)
+    args = ap.parse_args()
+
+    print(f"{'rate':>8} {'server':>10} {'cpu':>7} {'ttft_ms':>9} "
+          f"{'retr_us':>9} {'wakeups':>8}")
+    for rate in (15.0, 40.0, 80.0):
+        rng = np.random.default_rng(0)
+        met = drive(MetronomeServer(
+            make_engine(),
+            MetronomeConfig(m=3, v_target_us=3_000.0, t_long_us=60_000.0)),
+            args.requests, rate, rng)
+        rng = np.random.default_rng(0)
+        bp = drive(BusyPollServer(make_engine()), args.requests, rate, rng)
+        assert met["ok"] and bp["ok"]
+        for name, r in (("metronome", met), ("busy-poll", bp)):
+            print(f"{rate:>8.0f} {name:>10} {r['cpu']:>7.3f} "
+                  f"{r['ttft_ms']:>9.2f} {r['retr_us']:>9.0f} "
+                  f"{r['wakeups']:>8}")
+    print("\nMetronome trades a bounded retrieval delay (~V-bar) for a "
+          "large host-CPU saving — the paper's Fig 12, serving edition.")
+
+
+if __name__ == "__main__":
+    main()
+
+# Servers must be constructed fresh per run (their engine holds slot
+# state); `drive` stops them.

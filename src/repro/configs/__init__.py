@@ -1,0 +1,22 @@
+"""Assigned architecture pool (10 archs) + the paper's serving config.
+
+Importing this package registers every config; use
+``repro.configs.base.get_config(name)``.
+"""
+
+from .base import ModelConfig, ShapeConfig, SHAPES, cells, get_config, list_configs, register
+from . import (  # noqa: F401  (registration side effects)
+    internvl2_76b,
+    dbrx_132b,
+    llama4_scout_17b_a16e,
+    mamba2_370m,
+    gemma_2b,
+    gemma2_2b,
+    starcoder2_15b,
+    granite_3_8b,
+    whisper_small,
+    jamba_1_5_large_398b,
+)
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "cells", "get_config",
+           "list_configs", "register"]

@@ -1,0 +1,49 @@
+"""Metronome core: the paper's contribution as a reusable library.
+
+- analytics:  closed-form renewal model (Eqs 1-13)
+- controller: EWMA load estimate + adaptive T_S rule (Eqs 10/12)
+- hr_sleep:   precise userspace hybrid sleep (paper Sec 3.1 adaptation)
+- trylock:    non-blocking queue ownership (paper Sec 3.2)
+- pollers:    real-thread runtime (paper Listing 2) + busy-poll baseline
+- simulator:  discrete-event renewal simulator (paper Sec 5 apparatus)
+"""
+
+from . import analytics
+from .controller import MetronomeConfig, MetronomeController
+from .hr_sleep import calibrate, hr_sleep, make_hr_sleep, measure_precision, naive_sleep
+from .pollers import BoundedQueue, BusyPollLoop, MetronomePollers, PollerStats
+from .simulator import (
+    HR_SLEEP_MODEL,
+    NANOSLEEP_MODEL,
+    PERFECT_SLEEP_MODEL,
+    SimConfig,
+    SimResult,
+    SleepModel,
+    simulate,
+    simulate_busy_poll,
+)
+from .trylock import TryLock
+
+__all__ = [
+    "analytics",
+    "MetronomeConfig",
+    "MetronomeController",
+    "calibrate",
+    "hr_sleep",
+    "make_hr_sleep",
+    "measure_precision",
+    "naive_sleep",
+    "BoundedQueue",
+    "BusyPollLoop",
+    "MetronomePollers",
+    "PollerStats",
+    "HR_SLEEP_MODEL",
+    "NANOSLEEP_MODEL",
+    "PERFECT_SLEEP_MODEL",
+    "SimConfig",
+    "SimResult",
+    "SleepModel",
+    "simulate",
+    "simulate_busy_poll",
+    "TryLock",
+]

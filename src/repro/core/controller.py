@@ -1,0 +1,75 @@
+"""Adaptive Metronome controller — the paper's Sec 4.3 control law.
+
+One ``MetronomeController`` is shared by the M pollers of a queue.  After
+every renewal cycle (vacation V followed by busy period B) the finishing
+primary calls ``on_cycle_end(B, V)``; the controller updates the EWMA load
+estimate (Eq 10) and re-derives the primary timeout T_S from the
+constant-vacation-target rule (Eq 12).  Backups always sleep T_L.
+
+The controller is deliberately lock-free-ish: rho/T_S are plain Python
+floats updated by whichever thread ends a cycle; stale reads by other
+threads are harmless (the control law is a fixed point, and the paper's own
+threads race the same way).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from . import analytics
+
+__all__ = ["MetronomeConfig", "MetronomeController"]
+
+
+@dataclass(frozen=True)
+class MetronomeConfig:
+    """Tuning knobs, defaults = the paper's evaluation settings (Sec 5)."""
+
+    m: int = 3                   # deployed pollers (paper: 3)
+    v_target_us: float = 10.0    # constant vacation target V-bar (paper: 10us)
+    t_long_us: float = 500.0     # backup timeout T_L (paper: 500us)
+    alpha: float = 0.125         # EWMA smoothing for rho (Eq 10)
+    rho_init: float = 0.5
+    ts_min_us: float = 1.0       # clamp: never spin faster than 1us cadence
+    ts_max_us: float | None = None  # default M * v_target (the rho->0 limit)
+
+    def resolved_ts_max(self) -> float:
+        return self.ts_max_us if self.ts_max_us is not None else self.m * self.v_target_us
+
+
+@dataclass
+class MetronomeController:
+    cfg: MetronomeConfig = field(default_factory=MetronomeConfig)
+
+    def __post_init__(self) -> None:
+        self.rho: float = self.cfg.rho_init
+        self.t_short_us: float = float(
+            analytics.adaptive_ts(
+                self.cfg.v_target_us, self.rho, self.cfg.m,
+                ts_min=self.cfg.ts_min_us, ts_max=self.cfg.resolved_ts_max(),
+            )
+        )
+        self.cycles: int = 0
+
+    # -- control-plane updates ------------------------------------------------
+    def on_cycle_end(self, busy_us: float, vacation_us: float) -> float:
+        """Feed one (B, V) observation; returns the new T_S in us."""
+        self.rho = float(
+            analytics.ewma_rho(self.rho, busy_us, vacation_us, self.cfg.alpha)
+        )
+        self.t_short_us = float(
+            analytics.adaptive_ts(
+                self.cfg.v_target_us, self.rho, self.cfg.m,
+                ts_min=self.cfg.ts_min_us, ts_max=self.cfg.resolved_ts_max(),
+            )
+        )
+        self.cycles += 1
+        return self.t_short_us
+
+    # -- data-plane reads -----------------------------------------------------
+    def timeout_us(self, *, primary: bool) -> float:
+        """Paper Listing 2 lines 11-14: T_S for primaries, T_L for backups."""
+        return self.t_short_us if primary else self.cfg.t_long_us
+
+    def timeout_ns(self, *, primary: bool) -> int:
+        return int(self.timeout_us(primary=primary) * 1_000)

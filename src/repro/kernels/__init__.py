@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the serving/training compute hot spots.
+
+Each kernel ships as <name>/{kernel.py, ops.py, ref.py}: the pallas_call +
+BlockSpec tiling, the jit'd public wrapper, and the pure-jnp oracle it is
+validated against (interpret mode on CPU; the TPU target is declared in
+the BlockSpecs).  The paper's own contribution is host-side control
+(DESIGN.md) — these kernels serve the model substrate it feeds.
+"""
+
+from .decode_attention import decode_attention, reference_decode_attention  # noqa: F401
+from .flash_attention import flash_attention, reference_attention  # noqa: F401
+from .ssd_scan import reference_ssd_scan, ssd_scan  # noqa: F401

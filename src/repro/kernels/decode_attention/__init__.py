@@ -1,0 +1,2 @@
+from .ops import decode_attention  # noqa: F401
+from .ref import reference_decode_attention  # noqa: F401

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the decode-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def reference_decode_attention(q, k, v, pos, *, softcap: float = 0.0,
+                               window: int = 0, scale: float | None = None):
+    """q: (B, H, hd); k, v: (B, T, KV, hd); pos: (B,) -> (B, H, hd)."""
+    b, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    scale = hd ** -0.5 if scale is None else scale
+    qg = q.reshape(b, kv, group, hd).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32)) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    kpos = jnp.arange(t)[None, :]
+    mask = kpos <= pos[:, None]
+    if window:
+        mask &= kpos > (pos[:, None] - window)
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, hd).astype(q.dtype)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def reference_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0, scale: float | None = None):
+    """q: (B, H, S, hd); k, v: (B, KV, T, hd).  Returns (B, H, S, hd)."""
+    b, h, s, hd = q.shape
+    kv, t = k.shape[1], k.shape[2]
+    group = h // kv
+    scale = hd ** -0.5 if scale is None else scale
+    qg = q.reshape(b, kv, group, s, hd).astype(jnp.float32)
+    logits = jnp.einsum("bkgsd,bktd->bkgst", qg, k.astype(jnp.float32)) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, s, hd).astype(q.dtype)

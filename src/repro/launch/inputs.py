@@ -1,0 +1,176 @@
+"""Cell builder: (architecture x input-shape x mesh) -> step fn + abstract
+sharded inputs (ShapeDtypeStructs — no allocation; spec §Multi-pod dry-run).
+
+``build_cell`` returns everything the dry-run (and the roofline harness)
+needs to ``jax.jit(step).lower(*abstract_inputs).compile()``.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, get_config
+from repro.models import Model
+from repro.sharding.logical import logical_axis_rules
+from repro.sharding.policy import (
+    batch_pspec,
+    cache_shardings,
+    logical_rules,
+    param_shardings,
+)
+from repro.train import OptConfig, init_opt, make_prefill_step, make_serve_step, make_train_step
+
+__all__ = ["build_cell", "Cell", "input_specs"]
+
+# Encoder context length for whisper decode cells (the self-attn KV is the
+# graded seq_len; the cross-attention memory is one fixed audio window).
+WHISPER_DECODE_ENC_LEN = 4096
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    cfg: ModelConfig
+    step: Callable
+    args: tuple                      # ShapeDtypeStructs with shardings
+    donate: tuple = ()
+    rules: dict = field(default_factory=dict)
+    mesh: Any = None
+    meta: dict = field(default_factory=dict)
+
+    def lower(self):
+        with logical_axis_rules(self.mesh, self.rules):
+            return jax.jit(self.step, donate_argnums=self.donate).lower(*self.args)
+
+
+def _sds(shape, dtype, mesh, pspec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, pspec))
+
+
+def _batch_axis(mesh, b: int):
+    """Batch sharding axes, degraded to replication if b doesn't divide
+    (long_500k has global_batch=1)."""
+    from repro.launch.mesh import batch_axes
+    bx = batch_axes(mesh)
+    n = 1
+    for a in bx:
+        n *= mesh.shape[a]
+    if not bx or b % n:
+        return None
+    return bx if len(bx) > 1 else bx[0]
+
+
+def _with_shardings(tree_sds, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree_sds, shardings)
+
+
+def _token_batch_sds(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                     labels: bool) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    bax = _batch_axis(mesh, b)
+    extra = cfg.frontend_len if cfg.frontend == "vision_stub" else 0
+    batch = {"tokens": _sds((b, s - extra), jnp.int32, mesh, P(bax))}
+    if labels:
+        batch["labels"] = _sds((b, s - extra), jnp.int32, mesh, P(bax))
+    if extra:
+        batch["prefix_embeds"] = _sds((b, extra, cfg.d_model),
+                                      jnp.dtype(cfg.compute_dtype), mesh,
+                                      P(bax, None, None))
+    if cfg.is_encdec:
+        batch["enc_frames"] = _sds((b, s, cfg.d_model),
+                                   jnp.dtype(cfg.compute_dtype), mesh,
+                                   P(bax, None, None))
+    return batch
+
+
+def input_specs(arch: str, shape_name: str, mesh):
+    """Abstract inputs for the cell (spec step 2). Returns (step, args)."""
+    cell = build_cell(arch, shape_name, mesh)
+    return cell.step, cell.args
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               remat: bool = True, probe_groups: int | None = None,
+               rule_overrides: dict | None = None,
+               cfg_overrides: dict | None = None) -> Cell:
+    """probe_groups=k builds a k-group, scan-unrolled variant of the arch
+    (same width/shape) whose HLO is loop-free — the roofline probes.
+    cfg_overrides: dataclasses.replace fields (e.g. kv_quant=True)."""
+    import dataclasses
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    if probe_groups is not None:
+        unit = cfg.scan_unit()
+        groups = cfg.n_layers // unit
+        enc_ratio = cfg.n_encoder_layers // groups if cfg.is_encdec else 0
+        cfg = dataclasses.replace(
+            cfg, n_layers=unit * probe_groups,
+            n_encoder_layers=enc_ratio * probe_groups)
+    model = Model(cfg, unroll=probe_groups is not None)
+    mode = shape.kind
+    rules = logical_rules(mesh, mode, overrides=rule_overrides)
+
+    max_seq = shape.seq_len if not cfg.use_rope else 4096
+    params_sds = jax.eval_shape(
+        functools.partial(model.init, max_seq=max_seq), jax.random.PRNGKey(0))
+    p_shard = param_shardings(cfg, params_sds, mesh,
+                              "train" if mode == "train" else "serve")
+    params_in = _with_shardings(params_sds, p_shard)
+
+    if mode == "train":
+        opt_cfg = OptConfig(moment_dtype=cfg.moment_dtype)
+        opt_sds = jax.eval_shape(functools.partial(init_opt, cfg=opt_cfg),
+                                 params_sds)
+        opt_shard = {
+            "m": jax.tree.map(lambda s, sh: sh, opt_sds["m"], p_shard),
+            "v": jax.tree.map(lambda s, sh: sh, opt_sds["v"], p_shard),
+            "count": NamedSharding(mesh, P()),
+        }
+        opt_in = _with_shardings(opt_sds, opt_shard)
+        batch = _token_batch_sds(cfg, shape, mesh, labels=True)
+        step = make_train_step(model, opt_cfg, remat=remat)
+        return Cell(arch, shape_name, cfg, step,
+                    (params_in, opt_in, batch), donate=(0, 1),
+                    rules=rules, mesh=mesh,
+                    meta={"mode": mode, "opt": opt_cfg})
+
+    if mode == "prefill":
+        batch = _token_batch_sds(cfg, shape, mesh, labels=False)
+        step = make_prefill_step(model)
+        return Cell(arch, shape_name, cfg, step, (params_in, batch),
+                    rules=rules, mesh=mesh, meta={"mode": mode})
+
+    # decode: one new token against a KV cache of seq_len
+    b, s = shape.global_batch, shape.seq_len
+    cache_sds = jax.eval_shape(
+        functools.partial(model.init_cache, b, s))
+    if cfg.is_encdec:
+        hd = cfg.resolved_head_dim
+        groups = cfg.n_layers // cfg.scan_unit()
+        cross = {"k": jax.ShapeDtypeStruct(
+                    (groups, b, WHISPER_DECODE_ENC_LEN, cfg.n_heads, hd),
+                    jnp.dtype(cfg.compute_dtype)),
+                 "v": jax.ShapeDtypeStruct(
+                    (groups, b, WHISPER_DECODE_ENC_LEN, cfg.n_heads, hd),
+                    jnp.dtype(cfg.compute_dtype))}
+        cache_sds = {"self": cache_sds, "cross": cross}
+    cache_in = _with_shardings(cache_sds, cache_shardings(cache_sds, mesh))
+    bax = _batch_axis(mesh, b)
+    tokens = _sds((b,), jnp.int32, mesh, P(bax))
+    pos = _sds((b,), jnp.int32, mesh, P(bax))
+    step = make_serve_step(model)
+    return Cell(arch, shape_name, cfg, step,
+                (params_in, tokens, cache_in, pos), donate=(2,),
+                rules=rules, mesh=mesh, meta={"mode": "decode"})

@@ -1,0 +1,35 @@
+"""Stub modality frontends (per assignment: ``[audio]``/``[vlm]`` entries
+specify the transformer BACKBONE only; the frontend provides precomputed
+frame/patch embeddings).
+
+These helpers synthesize deterministic embeddings with the right shapes —
+what a real ViT patchifier (internvl2) or log-mel conv stack (whisper)
+would emit — for tests, examples, and the serving path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["vision_patches", "audio_frames"]
+
+
+def vision_patches(cfg: ModelConfig, batch: int, *, key=None):
+    """(B, frontend_len, d_model) patch embeddings (InternViT stand-in)."""
+    assert cfg.frontend == "vision_stub", cfg.name
+    key = jax.random.PRNGKey(0) if key is None else key
+    return jax.random.normal(
+        key, (batch, cfg.frontend_len, cfg.d_model),
+        dtype=jnp.dtype(cfg.compute_dtype)) * 0.02
+
+
+def audio_frames(cfg: ModelConfig, batch: int, n_frames: int, *, key=None):
+    """(B, T, d_model) encoder frame embeddings (conv frontend stand-in)."""
+    assert cfg.frontend == "audio_stub", cfg.name
+    key = jax.random.PRNGKey(0) if key is None else key
+    return jax.random.normal(
+        key, (batch, n_frames, cfg.d_model),
+        dtype=jnp.dtype(cfg.compute_dtype)) * 0.02

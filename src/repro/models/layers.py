@@ -1,0 +1,87 @@
+"""Shared neural net layers (pure JAX, functional, dict params)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "dense_init", "rmsnorm_init", "rmsnorm", "softcap", "rope_freqs",
+    "apply_rope", "mlp_init", "mlp_apply", "embed_init",
+]
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Lecun-normal by fan-in (first dim for (in, out) matrices)."""
+    fan_in = shape[0] if len(shape) == 2 else shape[-2]
+    std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype):
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02).astype(dtype)
+
+
+def rmsnorm_init(d, dtype):
+    return jnp.ones((d,), dtype=dtype)
+
+
+def rmsnorm(x, scale, eps: float):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    """gemma2-style logit soft capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), dtype=jnp.float32)
+    ang = positions.astype(jnp.float32)[..., None] * freqs          # (..., S, hd/2)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN): swiglu / geglu / gelu
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, mlp_type: str, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+         "w_down": dense_init(ks[2], (d_ff, d_model), dtype)}
+    if mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[0], (d_model, d_ff), dtype)
+    return p
+
+
+def mlp_apply(p, x, mlp_type: str):
+    up = x @ p["w_up"]
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * up
+    elif mlp_type == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * up
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(up, approximate=True)
+    else:
+        raise ValueError(mlp_type)
+    return h @ p["w_down"]

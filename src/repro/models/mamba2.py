@@ -1,0 +1,193 @@
+"""Mamba2 / SSD (state-space duality) block — arXiv:2405.21060.
+
+Chunked SSD forward for train/prefill (quadratic within a chunk, linear
+recurrence across chunks) and an O(1)-per-token recurrent decode step.
+The intra-chunk core can route through the Pallas kernel
+(kernels/ssd_scan); this module is the pure-jnp reference path.
+
+Math (per head h, state dim N):
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t  x_t^T      (A < 0 scalar/head)
+    y_t = C_t . h_t + D x_t
+Chunked over Q-length chunks with inclusive in-chunk log-decay cumsum
+``cum``:
+    y_intra[i] = sum_{j<=i} exp(cum_i - cum_j) (C_i.B_j) dt_j x_j
+    y_inter[i] = exp(cum_i) C_i . h_chunk_start
+    S_chunk    = sum_j exp(cum_last - cum_j) dt_j B_j (x) x_j
+    h_next     = exp(cum_last) h_prev + S_chunk
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from .layers import dense_init, rmsnorm, rmsnorm_init
+
+__all__ = ["ssm_init", "ssm_dims", "ssm_forward", "ssm_decode", "init_ssm_state",
+           "ssd_chunked"]
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    conv_dim = d_in + 2 * cfg.ssm_state
+    return d_in, nh, conv_dim
+
+
+def ssm_init(key, cfg: ModelConfig, dtype):
+    d, ds = cfg.d_model, cfg.ssm_state
+    d_in, nh, conv_dim = ssm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    # dt bias: inverse-softplus of dt ~ U[1e-3, 1e-1] (mamba2 reference init)
+    dt = np.exp(np.random.RandomState(0).uniform(np.log(1e-3), np.log(1e-1), nh))
+    dt_bias = dt + np.log(-np.expm1(-dt))
+    return {
+        "wz": dense_init(ks[0], (d, d_in), dtype),
+        "wx": dense_init(ks[1], (d, d_in), dtype),
+        "wB": dense_init(ks[2], (d, ds), dtype),
+        "wC": dense_init(ks[3], (d, ds), dtype),
+        "wdt": dense_init(ks[4], (d, nh), dtype),
+        "dt_bias": jnp.asarray(dt_bias, jnp.float32),
+        "A_log": jnp.log(jnp.asarray(
+            np.random.RandomState(1).uniform(1.0, 16.0, nh), jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "conv_w": dense_init(ks[5], (cfg.ssm_conv_width, conv_dim), dtype, scale=0.1),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "gate_norm": rmsnorm_init(d_in, dtype),
+        "out": dense_init(ks[6], (d_in, d), dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv via shifted sums. x: (B,L,C); w: (W,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _conv_tail(x, width):
+    """Last (W-1) raw inputs — the decode-time conv state."""
+    b, length, c = x.shape
+    pad = jnp.pad(x, ((0, 0), (max(width - 1 - length, 0), 0), (0, 0)))
+    return pad[:, -(width - 1):, :]
+
+
+def _segsum_exp(cum):
+    """exp(cum_i - cum_j) masked to i >= j. cum: (..., Q). -> (..., Q, Q)."""
+    q = cum.shape[-1]
+    seg = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, jnp.exp(seg), 0.0)
+
+
+def ssd_chunked(x, dt, a, bmat, cmat, chunk: int, h0=None):
+    """Chunked SSD scan (fp32 internals).
+
+    x:    (B, L, nh, hd)   inputs
+    dt:   (B, L, nh)       positive step sizes
+    a:    (nh,)            negative decay rates (A = -exp(A_log))
+    bmat: (B, L, N)        input  projections (G=1 group, shared over heads)
+    cmat: (B, L, N)        output projections
+    h0:   (B, nh, hd, N)   initial state (None -> zeros)
+    Returns (y: (B,L,nh,hd), h_final: (B,nh,hd,N)).
+    """
+    bsz, length, nh, hd = x.shape
+    n = bmat.shape[-1]
+    assert length % chunk == 0, (length, chunk)
+    nc = length // chunk
+    f32 = jnp.float32
+    xc = x.reshape(bsz, nc, chunk, nh, hd).astype(f32)
+    dtc = dt.reshape(bsz, nc, chunk, nh).astype(f32)
+    bc = bmat.reshape(bsz, nc, chunk, n).astype(f32)
+    cc = cmat.reshape(bsz, nc, chunk, n).astype(f32)
+    da = dtc * a[None, None, None, :]                      # (B,nc,Q,nh) log-decay
+    cum = jnp.cumsum(da, axis=2)                           # inclusive
+
+    # Intra-chunk (the quadratic, attention-like term).
+    decay = _segsum_exp(jnp.moveaxis(cum, -1, 2))          # (B,nc,nh,Q,Q)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)         # (B,nc,Q,Q)
+    att = scores[:, :, None] * decay * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchij,bcjhd->bcihd", att, xc)
+
+    # Chunk summary states.
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)           # (B,nc,Q,nh)
+    s_chunk = jnp.einsum("bcqh,bcqn,bcqhd->bchdn",
+                         decay_out * dtc, bc, xc)          # (B,nc,nh,hd,N)
+    total = jnp.exp(cum[:, :, -1, :])                      # (B,nc,nh)
+
+    # Inter-chunk recurrence (sequential scan over chunks).
+    hinit = (jnp.zeros((bsz, nh, hd, n), f32) if h0 is None
+             else h0.astype(f32))
+
+    def step(h, inp):
+        s_c, tot = inp
+        return tot[..., None, None] * h + s_c, h           # emit state *before*
+
+    (h_final, h_prevs) = jax.lax.scan(
+        step, hinit,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(total, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                  # (B,nc,nh,hd,N)
+
+    y_inter = jnp.einsum("bcqn,bchdn->bcqhd", cc, h_prevs) * \
+        jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(bsz, length, nh, hd)
+    return y.astype(x.dtype), h_final
+
+
+def ssm_forward(p, cfg: ModelConfig, x):
+    """Full-sequence Mamba2 block. x: (B,L,D) -> (y, state_dict)."""
+    d_in, nh, conv_dim = ssm_dims(cfg)
+    hd, ds, width = cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_conv_width
+    z = x @ p["wz"]
+    raw = jnp.concatenate([x @ p["wx"], x @ p["wB"], x @ p["wC"]], axis=-1)
+    conv_out = _causal_conv(raw, p["conv_w"], p["conv_b"])
+    xs, bmat, cmat = jnp.split(conv_out, [d_in, d_in + ds], axis=-1)
+    dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32) +
+                         p["dt_bias"][None, None, :])
+    a = -jnp.exp(p["A_log"])
+    xh = xs.reshape(*xs.shape[:-1], nh, hd)
+    y, h_final = ssd_chunked(xh.astype(jnp.float32), dt, a, bmat, cmat,
+                             min(cfg.ssm_chunk, x.shape[1]))
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(*x.shape[:-1], d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    state = {"conv": _conv_tail(raw, width), "ssm": h_final.astype(jnp.float32)}
+    return y @ p["out"], state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype):
+    d_in, nh, conv_dim = ssm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, cfg.ssm_head_dim, cfg.ssm_state),
+                         jnp.float32),
+    }
+
+
+def ssm_decode(p, cfg: ModelConfig, x, state):
+    """Single-token recurrent step. x: (B,1,D) -> (y: (B,1,D), new state)."""
+    d_in, nh, conv_dim = ssm_dims(cfg)
+    hd, ds = cfg.ssm_head_dim, cfg.ssm_state
+    b = x.shape[0]
+    z = x @ p["wz"]                                         # (B,1,d_in)
+    raw = jnp.concatenate([x @ p["wx"], x @ p["wB"], x @ p["wC"]], axis=-1)
+    window = jnp.concatenate([state["conv"].astype(raw.dtype), raw], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)[:, None, :]            # (B,1,convdim)
+    xs, bmat, cmat = jnp.split(conv_out, [d_in, d_in + ds], axis=-1)
+    dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32) +
+                         p["dt_bias"][None, None, :])[:, 0]  # (B,nh)
+    a = -jnp.exp(p["A_log"])
+    xh = xs[:, 0].reshape(b, nh, hd).astype(jnp.float32)
+    decay = jnp.exp(dt * a[None, :])                        # (B,nh)
+    h = state["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bh,bn,bhd->bhdn", dt, bmat[:, 0].astype(jnp.float32), xh)
+    y = jnp.einsum("bn,bhdn->bhd", cmat[:, 0].astype(jnp.float32), h)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out"], {"conv": window[:, 1:, :], "ssm": h}

@@ -1,0 +1,353 @@
+"""Composable decoder/enc-dec stack covering all 10 assigned architectures.
+
+The layer plan (configs.base.ModelConfig.layer_plan) is compressed to its
+smallest repeating unit and the stack is executed as ``jax.lax.scan`` over
+stacked per-group parameters — constant-size HLO regardless of depth (80L
+internvl2 and 72L jamba compile as fast as 2 layers), which is what makes
+the 512-device dry-run tractable.
+
+Supported plans:
+  dense        unit=1:  (attn, dense)
+  moe          unit=1:  (attn, moe)
+  gemma2       unit=2:  (attn_local, dense), (attn, dense)
+  ssm          unit=1:  (ssm, none)
+  jamba hybrid unit=8:  (attn, moe?), (ssm, ...)x7 with moe every 2nd layer
+  whisper      encoder stack (bidirectional) + decoder w/ cross-attention
+
+Three entry points per model: ``forward`` (full sequence, train),
+``prefill`` (full sequence -> logits + KV/SSM cache), ``decode_step``
+(one token, cache update).  VLM/audio frontends are stubs per the
+assignment: ``prefix_embeds`` / ``enc_frames`` arrive precomputed.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.logical import shard
+from . import attention as attn
+from . import mamba2 as ssm
+from .layers import embed_init, mlp_apply, mlp_init, rmsnorm, rmsnorm_init, softcap
+from .moe import moe_apply, moe_init
+
+__all__ = ["Model"]
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, mixer: str, ffn: str, dtype,
+                *, with_cross: bool, bidir: bool = False):
+    ks = jax.random.split(key, 4)
+    p: dict = {}
+    if mixer.startswith("attn"):
+        p["mixer_norm"] = rmsnorm_init(cfg.d_model, dtype)
+        p["mixer"] = attn.attn_init(ks[0], cfg, dtype)
+    elif mixer == "ssm":
+        p["mixer_norm"] = rmsnorm_init(cfg.d_model, dtype)
+        p["mixer"] = ssm.ssm_init(ks[0], cfg, dtype)
+    if with_cross:
+        p["cross_norm"] = rmsnorm_init(cfg.d_model, dtype)
+        p["cross"] = attn.attn_init(ks[1], cfg, dtype, cross=True)
+    if ffn == "dense":
+        p["ffn_norm"] = rmsnorm_init(cfg.d_model, dtype)
+        p["ffn"] = mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype)
+    elif ffn == "moe":
+        p["ffn_norm"] = rmsnorm_init(cfg.d_model, dtype)
+        p["ffn"] = moe_init(ks[3], cfg, dtype)
+    return p
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    # Fully unroll the layer scans (roofline probes: XLA's HloCostAnalysis
+    # counts while-loop bodies once, so exact FLOP/byte/collective counts
+    # need loop-free HLO; see roofline/analysis.py).
+    unroll: bool = False
+
+    # ---- construction -----------------------------------------------------
+    def init(self, key, *, max_seq: int = 4096):
+        cfg = self.cfg
+        dtype = _dtype(cfg.param_dtype)
+        unit = cfg.scan_unit()
+        plan = cfg.layer_plan()[:unit]
+        groups = cfg.n_layers // unit
+        k_emb, k_blocks, k_head, k_enc = jax.random.split(key, 4)
+
+        def init_group(gkey):
+            lks = jax.random.split(gkey, unit)
+            return {f"layer{j}": _init_layer(
+                        lks[j], cfg, plan[j][0], plan[j][1], dtype,
+                        with_cross=cfg.is_encdec)
+                    for j in range(unit)}
+
+        params = {
+            "embed": embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+            "blocks": jax.vmap(init_group)(jax.random.split(k_blocks, groups)),
+            "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        }
+        has_attn = any(m.startswith("attn") for m, _ in cfg.layer_plan())
+        if not cfg.use_rope and has_attn:
+            # learned absolute positions (whisper); attention-free stacks
+            # (mamba2) need no positional encoding at all
+            params["pos_embed"] = embed_init(
+                jax.random.fold_in(k_emb, 1), max_seq, cfg.d_model, dtype)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = embed_init(k_head, cfg.vocab_size, cfg.d_model, dtype).T
+        if cfg.is_encdec:
+            def init_enc_group(gkey):
+                return {"layer0": _init_layer(gkey, cfg, "attn", "dense",
+                                              dtype, with_cross=False, bidir=True)}
+            eg = cfg.n_encoder_layers
+            params["encoder"] = {
+                "pos_embed": embed_init(jax.random.fold_in(k_enc, 0),
+                                        max_seq, cfg.d_model, dtype),
+                "blocks": jax.vmap(init_enc_group)(jax.random.split(k_enc, eg)),
+                "final_norm": rmsnorm_init(cfg.d_model, dtype),
+            }
+        return params
+
+    # ---- shared pieces -----------------------------------------------------
+    def _embed(self, params, tokens):
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(_dtype(cfg.compute_dtype))
+        if cfg.scale_embeddings:
+            x *= jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        return x
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            # einsum instead of `@ embed.T`: the transpose folds into the
+            # dot instead of materializing a copied table (§Perf C2)
+            logits = jnp.einsum("bsd,vd->bsv", x,
+                                params["embed"].astype(x.dtype))
+        else:
+            logits = x @ params["lm_head"].astype(x.dtype)
+        logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+        return shard(logits, ("batch", None, "model"))
+
+    def _unit_plan(self):
+        unit = self.cfg.scan_unit()
+        return self.cfg.layer_plan()[:unit]
+
+    # ---- encoder (whisper) --------------------------------------------------
+    def encode(self, params, enc_frames):
+        """enc_frames: (B, T, D) precomputed stub frontend embeddings."""
+        cfg = self.cfg
+        enc = params["encoder"]
+        t = enc_frames.shape[1]
+        x = enc_frames.astype(_dtype(cfg.compute_dtype))
+        x = x + enc["pos_embed"][:t].astype(x.dtype)
+        positions = jnp.arange(t)
+
+        def body(carry, gp):
+            h = carry
+            sub = gp["layer0"]
+            a = attn.attn_apply(sub["mixer"], cfg,
+                                rmsnorm(h, sub["mixer_norm"], cfg.norm_eps),
+                                positions, causal=False)
+            h = h + a
+            f = mlp_apply(sub["ffn"],
+                          rmsnorm(h, sub["ffn_norm"], cfg.norm_eps), cfg.mlp_type)
+            h = h + f
+            h = shard(h, ("batch", "seq", None))
+            return h, None
+
+        x, _ = jax.lax.scan(body, x, enc["blocks"], unroll=self.unroll)
+        return rmsnorm(x, enc["final_norm"], cfg.norm_eps)
+
+    # ---- full-sequence decoder (train / prefill core) ------------------------
+    def _stack(self, params, x, positions, memory, *, collect_cache: bool,
+               remat: bool = False):
+        cfg = self.cfg
+        plan = self._unit_plan()
+
+        def body(carry, gp):
+            h, aux = carry
+            cache_out = {}
+            for j, (mixer, ffn) in enumerate(plan):
+                sub = gp[f"layer{j}"]
+                if mixer.startswith("attn"):
+                    hin = rmsnorm(h, sub["mixer_norm"], cfg.norm_eps)
+                    if collect_cache:
+                        a, entry = attn.attn_prefill(
+                            sub["mixer"], cfg, hin, positions,
+                            local=(mixer == "attn_local"))
+                        cache_out[f"layer{j}"] = entry
+                    else:
+                        a = attn.attn_apply(sub["mixer"], cfg, hin, positions,
+                                            local=(mixer == "attn_local"))
+                    h = h + a
+                elif mixer == "ssm":
+                    hin = rmsnorm(h, sub["mixer_norm"], cfg.norm_eps)
+                    a, state = ssm.ssm_forward(sub["mixer"], cfg, hin)
+                    if collect_cache:
+                        cache_out[f"layer{j}"] = state
+                    h = h + a
+                if cfg.is_encdec:
+                    hin = rmsnorm(h, sub["cross_norm"], cfg.norm_eps)
+                    c = attn.attn_apply(sub["cross"], cfg, hin, positions,
+                                        causal=False, xkv=memory)
+                    h = h + c
+                if ffn == "dense":
+                    f = mlp_apply(sub["ffn"],
+                                  rmsnorm(h, sub["ffn_norm"], cfg.norm_eps),
+                                  cfg.mlp_type)
+                    h = h + f
+                elif ffn == "moe":
+                    f, a_loss = moe_apply(sub["ffn"], cfg,
+                                          rmsnorm(h, sub["ffn_norm"], cfg.norm_eps))
+                    h = h + f
+                    aux = aux + a_loss
+                h = shard(h, ("batch", "seq", None))
+            return (h, aux), cache_out if collect_cache else None
+
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        (x, aux), caches = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                        params["blocks"], unroll=self.unroll)
+        return x, aux, caches
+
+    def forward(self, params, batch, *, remat: bool = False):
+        """Full-sequence logits. batch: dict(tokens, prefix_embeds?, enc_frames?)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens)
+        if cfg.frontend and "prefix_embeds" in batch:
+            pre = batch["prefix_embeds"].astype(x.dtype)
+            x = jnp.concatenate([pre, x], axis=1)
+        s = x.shape[1]
+        positions = batch.get("positions", jnp.arange(s))
+        if not cfg.use_rope and "pos_embed" in params:
+            x = x + params["pos_embed"][:s].astype(x.dtype)
+        memory = self.encode(params, batch["enc_frames"]) if cfg.is_encdec else None
+        x = shard(x, ("batch", "seq", None))
+        x, aux, _ = self._stack(params, x, positions, memory,
+                                collect_cache=False, remat=remat)
+        return self._logits(params, x), {"moe_aux": aux}
+
+    # ---- serving: prefill + decode -------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        """Zeroed cache pytree with leaves stacked over scan groups."""
+        cfg = self.cfg
+        dtype = _dtype(cfg.compute_dtype)
+        plan = self._unit_plan()
+        groups = cfg.n_layers // cfg.scan_unit()
+
+        def one_group():
+            c = {}
+            for j, (mixer, _) in enumerate(plan):
+                if mixer.startswith("attn"):
+                    c[f"layer{j}"] = attn.init_kv_cache(
+                        cfg, batch, max_len, dtype,
+                        local=(mixer == "attn_local"))
+                elif mixer == "ssm":
+                    c[f"layer{j}"] = ssm.init_ssm_state(cfg, batch, dtype)
+            return c
+
+        cache = jax.tree.map(
+            lambda leaf: jnp.broadcast_to(leaf, (groups,) + leaf.shape),
+            one_group())
+        return cache
+
+    def prefill(self, params, batch):
+        """Returns (logits_full, cache).  Cache holds S_prefill positions;
+        callers pass it (padded to max_len by the engine) to decode_step."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens)
+        if cfg.frontend and "prefix_embeds" in batch:
+            x = jnp.concatenate([batch["prefix_embeds"].astype(x.dtype), x], 1)
+        s = x.shape[1]
+        positions = batch.get("positions", jnp.arange(s))
+        if not cfg.use_rope and "pos_embed" in params:
+            x = x + params["pos_embed"][:s].astype(x.dtype)
+        memory = self.encode(params, batch["enc_frames"]) if cfg.is_encdec else None
+        x = shard(x, ("batch", "seq", None))
+        x, aux, cache = self._stack(params, x, positions, memory,
+                                    collect_cache=True)
+        if cfg.is_encdec:
+            cache = {"self": cache, "cross": self._cross_cache(params, memory)}
+        return self._logits(params, x), cache
+
+    def _cross_cache(self, params, memory):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+
+        def body(_, gp):
+            sub = gp["layer0"]
+            k = (memory @ sub["cross"]["wk"]).reshape(*memory.shape[:-1], -1, hd)
+            v = (memory @ sub["cross"]["wv"]).reshape(*memory.shape[:-1], -1, hd)
+            return None, {"k": k, "v": v}
+
+        _, cross = jax.lax.scan(body, None, params["blocks"], unroll=self.unroll)
+        return cross
+
+    def decode_step(self, params, tokens, cache, pos):
+        """tokens: (B,) int32; pos: (B,) int32 current positions.
+
+        Returns (logits: (B, vocab), new_cache)."""
+        cfg = self.cfg
+        plan = self._unit_plan()
+        x = self._embed(params, tokens[:, None])
+        if not cfg.use_rope and "pos_embed" in params:
+            x = x + params["pos_embed"][pos][:, None].astype(x.dtype)
+        self_cache = cache["self"] if cfg.is_encdec else cache
+        cross_cache = cache.get("cross") if cfg.is_encdec else None
+        scanned = (params["blocks"], self_cache) + (
+            (cross_cache,) if cross_cache is not None else ())
+
+        def body(h, gp_gc):
+            gp, gc = gp_gc[0], gp_gc[1]
+            xc = gp_gc[2] if len(gp_gc) > 2 else None
+            new_gc = {}
+            for j, (mixer, ffn) in enumerate(plan):
+                sub = gp[f"layer{j}"]
+                if mixer.startswith("attn"):
+                    hin = rmsnorm(h, sub["mixer_norm"], cfg.norm_eps)
+                    a, kv = attn.attn_decode(sub["mixer"], cfg, hin,
+                                             gc[f"layer{j}"], pos,
+                                             local=(mixer == "attn_local"))
+                    new_gc[f"layer{j}"] = kv
+                    h = h + a
+                elif mixer == "ssm":
+                    hin = rmsnorm(h, sub["mixer_norm"], cfg.norm_eps)
+                    a, st = ssm.ssm_decode(sub["mixer"], cfg, hin, gc[f"layer{j}"])
+                    new_gc[f"layer{j}"] = st
+                    h = h + a
+                if cfg.is_encdec:
+                    hin = rmsnorm(h, sub["cross_norm"], cfg.norm_eps)
+                    b = h.shape[0]
+                    q = (hin @ sub["cross"]["wq"]).reshape(
+                        b, 1, cfg.n_heads, cfg.resolved_head_dim)
+                    o = attn._sdpa(cfg, q, xc["k"], xc["v"], None)
+                    h = h + o.reshape(b, 1, -1) @ sub["cross"]["wo"]
+                if ffn == "dense":
+                    h = h + mlp_apply(sub["ffn"],
+                                      rmsnorm(h, sub["ffn_norm"], cfg.norm_eps),
+                                      cfg.mlp_type)
+                elif ffn == "moe":
+                    f, _ = moe_apply(sub["ffn"], cfg,
+                                     rmsnorm(h, sub["ffn_norm"], cfg.norm_eps))
+                    h = h + f
+            return h, new_gc
+
+        x, new_self = jax.lax.scan(body, x, scanned, unroll=self.unroll)
+        logits = self._logits(params, x)[:, 0]
+        if cfg.is_encdec:
+            return logits, {"self": new_self, "cross": cross_cache}
+        return logits, new_self

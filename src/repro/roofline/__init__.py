@@ -1,0 +1,8 @@
+from .analysis import (  # noqa: F401
+    HW,
+    CellReport,
+    analyze_compiled,
+    collective_bytes,
+    model_flops,
+    roofline_terms,
+)

@@ -1,0 +1,2 @@
+from .engine import EngineConfig, InferenceEngine, Request  # noqa: F401
+from .server import BusyPollServer, MetronomeServer, ServerStats  # noqa: F401

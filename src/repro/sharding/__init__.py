@@ -1,0 +1,1 @@
+from .logical import logical_axis_rules, shard  # noqa: F401

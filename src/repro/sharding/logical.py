@@ -1,0 +1,67 @@
+"""Logical-axis sharding annotations (MaxText-style logical->physical rules).
+
+Model code annotates activations with *logical* axis names
+(``shard(x, ("batch", None, "model"))``); the launcher installs a rule set
+mapping logical names to physical mesh axes for the active parallelism
+strategy.  Outside any rule context the annotations are identity, so model
+code runs unchanged in single-device tests.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["logical_axis_rules", "shard", "current_rules", "to_pspec"]
+
+_state = threading.local()
+
+
+def current_rules():
+    return getattr(_state, "rules", None), getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def logical_axis_rules(mesh, rules: dict[str, tuple[str, ...] | str | None]):
+    """rules: logical axis name -> physical mesh axis (or tuple, or None).
+
+    Active during *tracing*: wrap the ``jit(...).lower(...)`` call.
+    """
+    prev = current_rules()
+    _state.rules, _state.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev
+
+
+def to_pspec(spec: tuple, rules: dict) -> P:
+    return P(*[None if ax is None else rules.get(ax) for ax in spec])
+
+
+def _divisible(shape, pspec, mesh) -> bool:
+    for dim, ax in zip(shape, tuple(pspec) + (None,) * len(shape)):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if dim % n:
+            return False
+    return True
+
+
+def shard(x, spec: tuple):
+    """Apply with_sharding_constraint if logical rules are active."""
+    rules, mesh = current_rules()
+    if rules is None or mesh is None:
+        return x
+    pspec = to_pspec(spec, rules)
+    if not _divisible(x.shape, pspec, mesh):
+        return x  # replicate rather than force uneven sharding
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, pspec))

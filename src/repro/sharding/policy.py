@@ -1,0 +1,186 @@
+"""Parameter/optimizer/activation sharding policy.
+
+Strategy (DESIGN.md §4):
+  - TP over "model": attention head projections, FFN hidden, SSM inner dim.
+  - FSDP/ZeRO over ("pod","data") in train mode: the non-TP dim of every
+    2-D weight; optimizer moments inherit the param sharding (ZeRO-1+2 come
+    for free; XLA emits all-gather-on-use / reduce-scatter-on-grad).
+  - EP: MoE expert dim over "data" (16 experts / 16 rows), expert-internal
+    hidden over "model".
+  - Serve mode: no FSDP (params TP-only + EP) to avoid per-token
+    all-gathers; decode KV caches shard batch over data and sequence over
+    "model" (flash-decoding style partial-softmax, resolved by GSPMD).
+
+Every rule degrades to replication when a dim is not divisible by the mesh
+axis (e.g. vocab 50280 % 16 != 0) — correctness first, the roofline shows
+the cost.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import batch_axes
+
+__all__ = ["param_pspecs", "param_shardings", "logical_rules", "batch_pspec"]
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fits(dim: int, mesh, axes):
+    """axes if dim divides evenly over them, else None (replicate)."""
+    return axes if axes and dim % _axis_size(mesh, axes) == 0 else None
+
+
+def logical_rules(mesh, mode: str, overrides: dict | None = None) -> dict:
+    """Logical-axis -> physical mesh axes for activation annotations.
+
+    `seq` (the residual-stream sequence dim between blocks) is None in the
+    baseline (Megatron replicated residual: wo/w_down emit an all-reduce).
+    Overriding it to "model" enables sequence parallelism (Korthikanti et
+    al.): GSPMD turns the per-layer all-reduce into reduce-scatter +
+    all-gather, halving residual collective bytes — a §Perf lever.
+    """
+    bx = batch_axes(mesh)
+    rules = {
+        "batch": bx if len(bx) > 1 else (bx[0] if bx else None),
+        "model": "model",
+        "expert": "data",
+        "expert_capacity": None,
+        "kv_seq": None,
+        "seq": None,
+    }
+    if mode == "decode":
+        rules["kv_seq"] = "model"
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def batch_pspec(mesh) -> P:
+    bx = batch_axes(mesh)
+    return P(bx if len(bx) > 1 else (bx[0] if bx else None))
+
+
+def _leaf_spec(path: tuple[str, ...], leaf, cfg: ModelConfig, mesh,
+               mode: str) -> P:
+    """PartitionSpec for one parameter, by name pattern (see module doc)."""
+    name = path[-1]
+    shape = leaf.shape
+    in_blocks = "blocks" in path
+    # strip the stacked scan-group dim for rule matching
+    dims = shape[1:] if in_blocks else shape
+    mdl = "model"
+    fsdp = batch_axes(mesh) if mode == "train" else None
+    if fsdp is not None and len(fsdp) == 1:
+        fsdp = fsdp[0]
+
+    def fit(i, ax):
+        return _fits(dims[i], mesh, ax)
+
+    if name in ("embed",):
+        # Tied embeddings double as the vocab-parallel output head: vocab
+        # over "model" so the logits matmul contracts a replicated D and
+        # emits vocab-sharded logits with no giant collective.  Untied
+        # input-only tables shard vocab over FSDP in train (masked gather +
+        # one activation all-reduce over data); in serve mode (no FSDP)
+        # shard D over "model" instead — a replicated 2 GB embed table per
+        # chip was the internvl2 decode peak-memory offender (§Perf B1).
+        if cfg.tie_embeddings:
+            spec = (fit(0, mdl), fit(1, fsdp))
+        elif mode == "train":
+            spec = (fit(0, fsdp), fit(1, None))
+        else:
+            spec = (fit(0, None), fit(1, mdl))
+    elif name == "lm_head":                     # (D, V): vocab-parallel
+        spec = (fit(0, fsdp), fit(1, mdl))
+    elif name == "pos_embed":                   # (S, D)
+        spec = (None, fit(1, mdl))
+    elif name in ("wq", "wk", "wv", "wz", "wx", "wdt"):   # (D, X)
+        spec = (fit(0, fsdp), fit(1, mdl))
+    elif name in ("wB", "wC"):                  # (D, ds): ds small
+        spec = (fit(0, fsdp), fit(1, None))
+    elif name in ("wo", "out"):                 # (X, D)
+        spec = (fit(0, mdl), fit(1, fsdp))
+    elif name == "router":                      # (D, E): tiny, replicate
+        spec = (None, None)
+    elif name in ("w_gate", "w_up"):
+        if len(dims) == 3:                      # (E, D, F): EP + TP
+            spec = (fit(0, "data"), None, fit(2, mdl))
+        else:                                   # (D, F)
+            spec = (fit(0, fsdp), fit(1, mdl))
+    elif name == "w_down":
+        if len(dims) == 3:                      # (E, F, D)
+            spec = (fit(0, "data"), fit(1, mdl), None)
+        else:                                   # (F, D)
+            spec = (fit(0, mdl), fit(1, fsdp))
+    elif name == "conv_w":                      # (W, convdim)
+        spec = (None, fit(1, mdl))
+    elif name in ("conv_b", "gate_norm"):       # (convdim,) / (d_in,)
+        spec = (fit(0, mdl),)
+    else:                                       # norms, biases, A_log, ...
+        spec = (None,) * len(dims)
+
+    if in_blocks:
+        spec = (None,) + tuple(spec)
+    return P(*spec)
+
+
+def param_pspecs(cfg: ModelConfig, params, mesh, mode: str):
+    """Pytree of PartitionSpec matching `params` (or its eval_shape tree)."""
+    def visit(path, leaf):
+        names = tuple(getattr(k, "key", getattr(k, "idx", None))
+                      for k in path)
+        return _leaf_spec(names, leaf, cfg, mesh, mode)
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def param_shardings(cfg: ModelConfig, params, mesh, mode: str):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(cfg, params, mesh, mode))
+
+
+def _cache_leaf_spec(name: str, leaf, mesh, mode: str) -> P:
+    """KV / SSM cache sharding.
+
+    Decode: batch over data(+pod), KV sequence over "model" (flash-decoding
+    style partial softmax — GSPMD inserts the max/sum reductions).  Prefill
+    outputs use the same layout so the engine can hand them to decode
+    without a reshard.
+    """
+    bx = batch_axes(mesh)
+    bax = bx if len(bx) > 1 else (bx[0] if bx else None)
+    b = _fits(leaf.shape[1], mesh, bax)
+    if name in ("k", "v"):            # (G, B, S, KV, hd)
+        return P(None, b, _fits(leaf.shape[2], mesh, "model"), None, None)
+    if name in ("k_scale", "v_scale"):  # (G, B, S, KV)
+        return P(None, b, _fits(leaf.shape[2], mesh, "model"), None)
+    if name == "conv":                # (G, B, W-1, conv_dim)
+        return P(None, b, None, _fits(leaf.shape[3], mesh, "model"))
+    if name == "ssm":                 # (G, B, nh, hd, N)
+        return P(None, b, _fits(leaf.shape[2], mesh, "model"), None, None)
+    return P(*([None] * leaf.ndim))
+
+
+def cache_pspecs(cache, mesh, mode: str = "decode"):
+    def visit(path, leaf):
+        name = getattr(path[-1], "key", None)
+        return _cache_leaf_spec(name, leaf, mesh, mode)
+    return jax.tree_util.tree_map_with_path(visit, cache)
+
+
+def cache_shardings(cache, mesh, mode: str = "decode"):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        cache_pspecs(cache, mesh, mode))

@@ -1,0 +1,133 @@
+"""Checkpointing: atomic, async, elastic (reshard-on-restore).
+
+Layout:  <dir>/step_<N>/{leaves.npz, meta.json}
+  - leaves.npz holds every pytree leaf under its '/'-joined key path;
+  - meta.json records step + tree structure for validation.
+
+Restore takes an optional ``shardings`` tree: leaves are device_put with
+the *target* sharding, so a checkpoint written on one mesh restores onto
+any other mesh (elastic scaling — a fresh jax.device_put reshards; the
+full array is the interchange format).  AsyncCheckpointer snapshots to
+host (one blocking device->host copy) then writes in a background thread,
+keeping the train loop running during I/O; ``keep`` bounds disk usage.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "AsyncCheckpointer"]
+
+
+def _keys(tree) -> list[str]:
+    return ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path)
+            for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    out = {}
+    for key, leaf in zip(_keys(tree), jax.tree_util.tree_flatten(tree)[0]):
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub":
+            # ml_dtypes (bfloat16, fp8) don't round-trip through np.savez;
+            # store as float32 (exact for bf16) and re-cast on restore.
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, *, extra: dict | None = None):
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:09d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        leaves = _flatten(tree)
+        np.savez(os.path.join(tmp, "leaves.npz"), **leaves)
+        meta = {"step": step, "n_leaves": len(leaves),
+                "extra": extra or {}}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)          # atomic publish
+    finally:
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp, ignore_errors=True)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like, *, shardings=None):
+    """Restore into the structure of `like` (a pytree or eval_shape tree).
+
+    `shardings`: optional matching tree of Sharding — leaves are placed
+    with the target sharding (elastic reshard-on-restore)."""
+    path = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(path, "leaves.npz"))
+    keys = _keys(like)
+    if set(keys) != set(data.files):
+        missing = set(keys) ^ set(data.files)
+        raise ValueError(f"checkpoint/model tree mismatch: {sorted(missing)[:5]}")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves_like))
+    restored = []
+    for key, ref, shd in zip(keys, leaves_like, shard_leaves):
+        arr = data[key]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {ref.shape}")
+        arr = arr.astype(ref.dtype)
+        restored.append(jax.device_put(arr, shd) if shd is not None
+                        else jax.device_put(arr))
+    return treedef.unflatten(restored), meta
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host then write in the background; keeps last `keep`."""
+
+    def __init__(self, ckpt_dir: str, *, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree, *, extra: dict | None = None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)   # blocking D2H snapshot
+
+        def _write():
+            save_checkpoint(self.ckpt_dir, step, host_tree, extra=extra)
+            self._gc()
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def _gc(self) -> None:
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.ckpt_dir)
+                       if d.startswith("step_"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:09d}"),
+                          ignore_errors=True)

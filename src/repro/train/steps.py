@@ -1,0 +1,96 @@
+"""Train / serve step functions (jit entry points for launcher + dry-run)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import Model
+from repro.sharding.logical import shard
+from .optimizer import OptConfig, apply_updates
+
+__all__ = ["make_loss_fn", "make_train_step", "make_prefill_step",
+           "make_serve_step"]
+
+
+def make_loss_fn(model: Model, *, remat: bool = True):
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch, remat=remat)
+        extra = cfg.frontend_len if cfg.frontend else 0
+        logits = logits[:, extra:]
+        labels = batch["labels"]
+        # lse - gold formulation: never materializes log-probs, and the
+        # gold gather is a one-hot contraction (XLA fuses iota+eq+reduce)
+        # rather than take_along_axis — a gather along the vocab-sharded
+        # axis would force GSPMD to all-gather the full (B,S,V) logits.
+        logits32 = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits32, axis=-1)
+        onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+        gold = jnp.einsum("bsv,bsv->bs", logits32, onehot)
+        ce = (lse - gold).mean()
+        loss = ce + cfg.router_aux_coef * aux["moe_aux"]
+        return loss, {"ce": ce, "moe_aux": aux["moe_aux"]}
+
+    return loss_fn
+
+
+def make_train_step(model: Model, opt_cfg: OptConfig, *, remat: bool = True,
+                    accum_steps: int = 1):
+    """One optimizer step.  ``accum_steps > 1`` splits the global batch into
+    microbatches and accumulates gradients in fp32 via lax.scan — the
+    standard large-scale lever for growing effective batch beyond
+    activation memory (each microbatch's backward frees before the next)."""
+    loss_fn = make_loss_fn(model, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda v: v.reshape((accum_steps, v.shape[0] // accum_steps)
+                                    + v.shape[1:]), batch)
+
+            def body(carry, microbatch):
+                gsum, lsum, asum = carry
+                (l, mets), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, microbatch)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l, asum + mets["moe_aux"]), mets["ce"]
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum, asum), ces = jax.lax.scan(
+                body, (g0, jnp.float32(0.0), jnp.float32(0.0)), mb)
+            grads = jax.tree.map(lambda g: (g / accum_steps), gsum)
+            loss = lsum / accum_steps
+            metrics = {"ce": ces.mean(), "moe_aux": asum / accum_steps}
+        params, opt_state, gnorm = apply_updates(params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch)
+        next_tok = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return next_tok, logits, cache
+
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    """One decode step: token in, token out, cache updated in place."""
+
+    def serve_step(params, tokens, cache, pos):
+        logits, cache = model.decode_step(params, tokens, cache, pos)
+        next_tok = jnp.argmax(logits.astype(jnp.float32), axis=-1)
+        return next_tok, cache
+
+    return serve_step

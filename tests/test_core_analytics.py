@@ -1,0 +1,138 @@
+"""Property tests for the closed-form renewal analytics (paper Eqs 1-13)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import analytics as an
+
+finite = dict(allow_nan=False, allow_infinity=False)
+ts_st = st.floats(min_value=1.0, max_value=100.0, **finite)
+ratio_st = st.floats(min_value=1.5, max_value=100.0, **finite)  # T_L / T_S
+m_st = st.integers(min_value=2, max_value=8)
+rho_st = st.floats(min_value=0.0, max_value=0.999, **finite)
+
+
+def test_busy_period_fixed_point():
+    # Eq (3) solves Eq (2): B = rho*(V + B)
+    v, rho = 20.0, 0.7
+    b = an.busy_period_mean(v, rho)
+    assert np.isclose(b, rho * (v + b))
+
+
+@given(ts=ts_st, ratio=ratio_st, m=m_st)
+@settings(max_examples=200, deadline=None)
+def test_cdf_is_distribution(ts, ratio, m):
+    tl = ts * ratio
+    xs = np.linspace(0, ts * 1.2, 64)
+    cdf = an.vacation_cdf_high(xs, ts, tl, m)
+    assert np.all(cdf >= -1e-12) and np.all(cdf <= 1 + 1e-12)
+    assert np.all(np.diff(cdf) >= -1e-9)          # monotone
+    assert cdf[-1] == pytest.approx(1.0)          # atom at T_S closes it
+
+
+@given(ts=ts_st, ratio=ratio_st, m=m_st)
+@settings(max_examples=100, deadline=None)
+def test_mean_vacation_matches_cdf_integral(ts, ratio, m):
+    # Eq (6) == integral of the survival function of Eq (5)
+    tl = ts * ratio
+    xs = np.linspace(0, ts, 20001)
+    numeric = np.trapezoid(1.0 - an.vacation_cdf_high(xs, ts, tl, m), xs)
+    assert an.mean_vacation_high(ts, tl, m) == pytest.approx(numeric, rel=1e-3)
+
+
+@given(ts=ts_st, ratio=ratio_st, m=m_st)
+@settings(max_examples=100, deadline=None)
+def test_pdf_integrates_to_cdf_mass(ts, ratio, m):
+    # Eq (9) is the density of Eq (5) below T_S (rest is the atom at T_S).
+    tl = ts * ratio
+    xs = np.linspace(0, ts, 20001)
+    mass = np.trapezoid(an.vacation_pdf_high(xs, ts, tl, m), xs)
+    assert mass == pytest.approx(an.vacation_cdf_high(ts - 1e-9, ts, tl, m), rel=1e-3)
+
+
+@given(ts=ts_st, ratio=ratio_st, m=m_st)
+@settings(max_examples=100, deadline=None)
+def test_backup_success_prob_is_integral(ts, ratio, m):
+    # Our corrected Eq (7) must equal its defining integral.
+    tl = ts * ratio
+    xs = np.linspace(0, ts, 20001)
+    numeric = np.trapezoid((1 / tl) * (1 - xs / tl) ** (m - 2), xs)
+    assert an.backup_success_prob(ts, tl, m) == pytest.approx(numeric, rel=1e-3)
+    assert 0.0 < an.backup_success_prob(ts, tl, m) < 1.0
+
+
+@given(ts=ts_st, m=m_st)
+@settings(max_examples=50, deadline=None)
+def test_low_load_limit(ts, m):
+    """Low-load regime consistency.
+
+    Integrating Eq (8) (min of M uniforms) gives exactly T_S/(M+1); the
+    paper's stated low-load mean T_S/M instead comes from the App C general
+    form at p=1 (M-1 uniforms + the finishing primary's atom at T_S).  We
+    pin down both facts — the adaptation rule (Eq 11/12) uses T_S/M.
+    """
+    xs = np.linspace(0, ts, 20001)
+    numeric = np.trapezoid(1.0 - an.vacation_cdf_low(xs, ts, m), xs)
+    assert numeric == pytest.approx(ts / (m + 1), rel=1e-3)
+    assert an.mean_vacation_general(ts, ts * 50, m, p=1.0) == pytest.approx(ts / m, rel=1e-6)
+    assert an.mean_vacation_low(ts, m) == pytest.approx(ts / m)
+
+
+@given(ts=ts_st, ratio=ratio_st, m=m_st)
+@settings(max_examples=100, deadline=None)
+def test_general_form_limits(ts, ratio, m):
+    """App C exact form must recover Eq (6) at p->0 and T_S/M at p->1.
+
+    This is the test that exposes the paper's printed-denominator typo
+    (documented in analytics.mean_vacation_general).
+    """
+    tl = ts * ratio
+    assert an.mean_vacation_general(ts, tl, m, p=1e-12) == pytest.approx(
+        an.mean_vacation_high(ts, tl, m), rel=1e-6)
+    assert an.mean_vacation_general(ts, tl, m, p=1.0) == pytest.approx(ts / m, rel=1e-6)
+
+
+@given(ts=ts_st, m=m_st, p=st.floats(min_value=1e-6, max_value=1.0, **finite))
+@settings(max_examples=100, deadline=None)
+def test_eq13_approx_converges_to_exact(ts, m, p):
+    # For T_L >> T_S the exact App C form converges to Eq (13).
+    tl = ts * 1e5
+    exact = an.mean_vacation_general(ts, tl, m, p)
+    approx = an.mean_vacation_general_approx(ts, m, p)
+    assert exact == pytest.approx(approx, rel=1e-3)
+
+
+@given(v=ts_st, m=m_st, rho=rho_st)
+@settings(max_examples=200, deadline=None)
+def test_adaptive_ts_inverts_eq13(v, m, rho):
+    """Eq (12) is exactly the T_S with which Eq (13) yields E[V] = V-bar."""
+    ts = float(an.adaptive_ts(v, rho, m, ts_min=0.0))
+    ev = an.mean_vacation_general_approx(ts, m, p=1.0 - rho)
+    assert ev == pytest.approx(v, rel=1e-6)
+
+
+def test_adaptive_ts_limits():
+    v, m = 10.0, 3
+    assert an.adaptive_ts(v, 0.0, m, ts_min=0) == pytest.approx(m * v)   # low load
+    assert an.adaptive_ts(v, 1.0, m, ts_min=0) == pytest.approx(v)       # high load
+    # monotone decreasing in rho
+    rhos = np.linspace(0, 1, 33)
+    ts = np.array([an.adaptive_ts(v, r, m, ts_min=0) for r in rhos])
+    assert np.all(np.diff(ts) <= 1e-12)
+
+
+@given(rho0=rho_st, b=ts_st, v=ts_st,
+       alpha=st.floats(min_value=0.01, max_value=1.0, **finite))
+@settings(max_examples=100, deadline=None)
+def test_ewma_rho_bounded(rho0, b, v, alpha):
+    r = an.ewma_rho(rho0, b, v, alpha)
+    assert 0.0 <= r <= 1.0
+
+
+def test_ewma_converges_to_true_load():
+    rho = 0.5
+    for _ in range(300):
+        rho = float(an.ewma_rho(rho, b=30.0, v=10.0, alpha=0.125))
+    assert rho == pytest.approx(0.75, abs=1e-6)   # B/(V+B) = 30/40

@@ -1,0 +1,194 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode),
+per the assignment: "For each Pallas kernel, sweep shapes/dtypes and
+assert_allclose against the ref.py pure-jnp oracle"."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+from repro.models.mamba2 import ssd_chunked
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,kv,hd,bq,bk", [
+    (1, 128, 4, 4, 64, 64, 64),       # MHA
+    (2, 256, 8, 2, 64, 128, 64),      # GQA 4:1
+    (1, 192, 4, 1, 128, 64, 96),      # MQA, uneven blocks
+    (1, 64, 2, 2, 256, 64, 64),       # gemma-style hd=256
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_oracle(dtype, b, s, h, kv, hd, bq, bk, causal):
+    key = jax.random.PRNGKey(hash((b, s, h, kv, hd, causal)) % 2**31)
+    q = _rand(key, (b, s, h, hd), dtype)
+    k = _rand(jax.random.fold_in(key, 1), (b, s, kv, hd), dtype)
+    v = _rand(jax.random.fold_in(key, 2), (b, s, kv, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    ref = flash_attention(q, k, v, causal=causal, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("window,softcap", [(32, 0.0), (0, 20.0), (64, 30.0)])
+def test_flash_attention_window_and_softcap(window, softcap):
+    key = jax.random.PRNGKey(7)
+    q = _rand(key, (2, 128, 4, 64), jnp.float32)
+    k = _rand(jax.random.fold_in(key, 1), (2, 128, 2, 64), jnp.float32)
+    v = _rand(jax.random.fold_in(key, 2), (2, 128, 2, 64), jnp.float32)
+    out = flash_attention(q, k, v, window=window, softcap=softcap,
+                          block_q=64, block_k=32)
+    ref = flash_attention(q, k, v, window=window, softcap=softcap,
+                          use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_matches_model_sdpa():
+    """Kernel must agree with the model's _sdpa (the path it replaces)."""
+    from repro.configs import get_config
+    from repro.models import attention as A
+
+    cfg = get_config("gemma2-2b").reduced()
+    key = jax.random.PRNGKey(3)
+    b, s, h, kv, hd = 2, 64, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = _rand(key, (b, s, h, hd), jnp.float32)
+    k = _rand(jax.random.fold_in(key, 1), (b, s, kv, hd), jnp.float32)
+    v = _rand(jax.random.fold_in(key, 2), (b, s, kv, hd), jnp.float32)
+    mask = A._causal_mask(s, s, 0, 0)[None, None, None]
+    ref = A._sdpa(cfg, q, k, v, mask)
+    out = flash_attention(q, k, v, causal=True,
+                          softcap=cfg.attn_softcap, block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kv,hd,t,bk", [
+    (2, 4, 4, 64, 256, 64),
+    (3, 8, 2, 64, 512, 128),
+    (1, 4, 1, 128, 256, 256),
+])
+def test_decode_attention_matches_oracle(dtype, b, h, kv, hd, t, bk):
+    key = jax.random.PRNGKey(hash((b, h, kv, hd, t)) % 2**31)
+    q = _rand(key, (b, h, hd), dtype)
+    k = _rand(jax.random.fold_in(key, 1), (b, t, kv, hd), dtype)
+    v = _rand(jax.random.fold_in(key, 2), (b, t, kv, hd), dtype)
+    pos = jax.random.randint(jax.random.fold_in(key, 3), (b,), 0, t)
+    out = decode_attention(q, k, v, pos, block_k=bk)
+    ref = decode_attention(q, k, v, pos, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+def test_decode_attention_ragged_positions():
+    """Continuous-batching semantics: each sequence has its own length."""
+    key = jax.random.PRNGKey(11)
+    b, h, kv, hd, t = 4, 4, 2, 64, 128
+    q = _rand(key, (b, h, hd), jnp.float32)
+    k = _rand(jax.random.fold_in(key, 1), (b, t, kv, hd), jnp.float32)
+    v = _rand(jax.random.fold_in(key, 2), (b, t, kv, hd), jnp.float32)
+    pos = jnp.array([0, 1, 63, 127], jnp.int32)
+    out = decode_attention(q, k, v, pos, block_k=32)
+    ref = decode_attention(q, k, v, pos, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    # pos=0 attends only to kv[0] => must equal v[0] (GQA-averaged heads)
+    expect = v[0, 0]                          # (kv, hd)
+    got = np.asarray(out[0]).reshape(kv, h // kv, hd)
+    np.testing.assert_allclose(got[0, 0], np.asarray(expect[0]), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_decode_attention_local_window(window):
+    key = jax.random.PRNGKey(13)
+    b, h, kv, hd, t = 2, 4, 4, 64, 128
+    q = _rand(key, (b, h, hd), jnp.float32)
+    k = _rand(jax.random.fold_in(key, 1), (b, t, kv, hd), jnp.float32)
+    v = _rand(jax.random.fold_in(key, 2), (b, t, kv, hd), jnp.float32)
+    pos = jnp.array([100, 127], jnp.int32)
+    out = decode_attention(q, k, v, pos, window=window, block_k=32)
+    ref = decode_attention(q, k, v, pos, window=window, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,L,nh,hd,n,chunk", [
+    (1, 64, 2, 16, 16, 16),
+    (2, 128, 4, 32, 64, 32),
+    (1, 256, 2, 64, 128, 64),         # mamba2-370m-like head
+])
+def test_ssd_scan_matches_oracle(dtype, b, L, nh, hd, n, chunk):
+    key = jax.random.PRNGKey(hash((b, L, nh, hd, n)) % 2**31)
+    x = _rand(key, (b, L, nh, hd), dtype)
+    dt = jax.nn.softplus(_rand(jax.random.fold_in(key, 1), (b, L, nh),
+                               jnp.float32))
+    a = -jnp.exp(_rand(jax.random.fold_in(key, 2), (nh,), jnp.float32) * 0.3)
+    bm = _rand(jax.random.fold_in(key, 3), (b, L, n), jnp.float32) * 0.3
+    cm = _rand(jax.random.fold_in(key, 4), (b, L, n), jnp.float32) * 0.3
+    yk, hk = ssd_scan(x, dt, a, bm, cm, chunk=chunk)
+    yr, hr = ssd_scan(x, dt, a, bm, cm, chunk=chunk, use_kernel=False)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(yk, np.float32),
+                               np.asarray(yr, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hr), **tol)
+
+
+def test_ssd_scan_matches_model_chunked():
+    """Kernel == the model's ssd_chunked (the path it accelerates)."""
+    key = jax.random.PRNGKey(5)
+    b, L, nh, hd, n, chunk = 2, 96, 3, 16, 32, 32
+    x = _rand(key, (b, L, nh, hd), jnp.float32)
+    dt = jax.nn.softplus(_rand(jax.random.fold_in(key, 1), (b, L, nh),
+                               jnp.float32))
+    a = -jnp.exp(_rand(jax.random.fold_in(key, 2), (nh,), jnp.float32) * 0.3)
+    bm = _rand(jax.random.fold_in(key, 3), (b, L, n), jnp.float32) * 0.3
+    cm = _rand(jax.random.fold_in(key, 4), (b, L, n), jnp.float32) * 0.3
+    yk, hk = ssd_scan(x, dt, a, bm, cm, chunk=chunk)
+    ym, hm = ssd_chunked(x, dt, a, bm, cm, chunk)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(ym),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hm),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_ssd_scan_state_continuity():
+    """Chunk boundaries must be invisible: scanning L tokens in one call
+    equals scanning with a different chunk size."""
+    key = jax.random.PRNGKey(9)
+    b, L, nh, hd, n = 1, 128, 2, 16, 16
+    x = _rand(key, (b, L, nh, hd), jnp.float32)
+    dt = jax.nn.softplus(_rand(jax.random.fold_in(key, 1), (b, L, nh),
+                               jnp.float32))
+    a = -jnp.exp(_rand(jax.random.fold_in(key, 2), (nh,), jnp.float32) * 0.3)
+    bm = _rand(jax.random.fold_in(key, 3), (b, L, n), jnp.float32) * 0.3
+    cm = _rand(jax.random.fold_in(key, 4), (b, L, n), jnp.float32) * 0.3
+    y16, h16 = ssd_scan(x, dt, a, bm, cm, chunk=16)
+    y64, h64 = ssd_scan(x, dt, a, bm, cm, chunk=64)
+    np.testing.assert_allclose(np.asarray(y16), np.asarray(y64),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h16), np.asarray(h64),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,65 @@
+"""Pipeline parallelism (gpipe) vs sequential reference — 8-device
+subprocess (the main test process stays single-device)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.sharding.pipeline import gpipe
+
+    mesh = jax.make_mesh((4, 2), ("pipe", "data"))
+    L, B, D, M = 8, 16, 12, 4
+    key = jax.random.PRNGKey(0)
+    ws = jax.random.normal(key, (L, D, D)) * 0.3
+    bs = jax.random.normal(jax.random.fold_in(key, 1), (L, D)) * 0.1
+    params = {"w": ws, "b": bs}
+    x = jax.random.normal(jax.random.fold_in(key, 2), (B, D))
+
+    def block(p, h):
+        return jnp.tanh(h @ p["w"] + p["b"])
+
+    def seq(params, x):
+        h = x
+        for l in range(L):
+            h = block(jax.tree.map(lambda p: p[l], params), h)
+        return h
+
+    ref = seq(params, x)
+    got = jax.jit(lambda p, v: gpipe(block, p, v, mesh, n_microbatches=M))(
+        params, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+    # collective-permute must be on the wire
+    txt = jax.jit(lambda p, v: gpipe(block, p, v, mesh, n_microbatches=M)
+                  ).lower(params, x).compile().as_text()
+    assert "collective-permute" in txt
+
+    # gradients flow through the pipeline and match the sequential grads
+    def loss_pipe(p, v):
+        return jnp.sum(gpipe(block, p, v, mesh, n_microbatches=M) ** 2)
+    def loss_seq(p, v):
+        return jnp.sum(seq(p, v) ** 2)
+    gp = jax.jit(jax.grad(loss_pipe))(params, x)
+    gs = jax.jit(jax.grad(loss_seq))(params, x)
+    np.testing.assert_allclose(np.asarray(gp["w"]), np.asarray(gs["w"]),
+                               rtol=2e-4, atol=2e-4)
+    print("PIPELINE_OK")
+""")
+
+
+@pytest.mark.slow
+def test_gpipe_matches_sequential_subprocess():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", SUBPROC],
+                         capture_output=True, text=True, env=env, cwd=root,
+                         timeout=560)
+    assert "PIPELINE_OK" in out.stdout, out.stderr[-3000:]
