@@ -1,6 +1,7 @@
 """Benchmarks reproducing the paper's tables/figures (simulation + host
-measurements).  Each function returns a list of (name, us_per_call,
-derived) rows for benchmarks/run.py's CSV contract.
+measurements), expressed through the ``repro.runtime`` policy/workload
+API.  Each function returns a list of (name, us_per_call, derived) rows
+for benchmarks/run.py's CSV contract.
 
 Mapping (paper -> function):
   Table 1   sleep precision              -> table1_sleep_precision
@@ -22,20 +23,28 @@ import time
 
 import numpy as np
 
-from repro.core import (
+from repro.core import MetronomeConfig, hr_sleep, measure_precision, naive_sleep
+from repro.core.analytics import vacation_pdf_high
+from repro.runtime import (
     HR_SLEEP_MODEL,
     NANOSLEEP_MODEL,
-    MetronomeConfig,
-    SimConfig,
-    hr_sleep,
-    measure_precision,
-    naive_sleep,
-    simulate,
-    simulate_busy_poll,
+    BusyPollPolicy,
+    EqualTimeoutsPolicy,
+    MetronomePolicy,
+    PoissonWorkload,
+    SimRunConfig,
+    simulate_run,
 )
-from repro.core.analytics import vacation_pdf_high
 
 ROWS = list[tuple[str, float, str]]
+
+LINE_RATE_MPPS = 14.88     # 10GbE, 64B frames
+MU_MPPS = 29.76
+
+
+def _metronome(m=3, v_target_us=10.0, t_long_us=500.0, **kw) -> MetronomePolicy:
+    return MetronomePolicy(MetronomeConfig(m=m, v_target_us=v_target_us,
+                                           t_long_us=t_long_us), **kw)
 
 
 def table1_sleep_precision(quick: bool = False) -> ROWS:
@@ -84,10 +93,9 @@ def fig5_vacation_pdf(quick: bool = False) -> ROWS:
     dur = 300_000.0 if quick else 900_000.0
     for m in (2, 3, 5):
         ts = 50.0
-        cfg = SimConfig(m=m, adaptive=False, equal_timeouts=True,
-                        v_target_us=ts, sleep_model=HR_SLEEP_MODEL,
-                        arrival_rate_mpps=14.88, duration_us=dur, seed=5)
-        res = simulate(cfg)
+        policy = EqualTimeoutsPolicy(MetronomeConfig(m=m, v_target_us=ts))
+        res = simulate_run(policy, PoissonWorkload(LINE_RATE_MPPS),
+                           SimRunConfig(duration_us=dur, seed=5))
         v = res.vacations_us
         v = v[(v > 0) & (v < ts)]
         hist, edges = np.histogram(v, bins=20, range=(0, ts), density=True)
@@ -104,9 +112,9 @@ def table2_vbar_tuning(quick: bool = False) -> ROWS:
     rows = []
     dur = 200_000.0 if quick else 1_000_000.0
     for v in (5.0, 10.0, 12.0, 15.0, 20.0):
-        cfg = SimConfig(adaptive=True, v_target_us=v, arrival_rate_mpps=14.88,
-                        service_rate_mpps=29.76, duration_us=dur, seed=2)
-        r = simulate(cfg)
+        r = simulate_run(_metronome(v_target_us=v),
+                         PoissonWorkload(LINE_RATE_MPPS),
+                         SimRunConfig(duration_us=dur, seed=2))
         rows.append((f"table2/vbar_{v:g}us", r.mean_vacation_us,
                      f"B_us={r.mean_busy_us:.2f};N_V={r.mean_nv:.1f};"
                      f"loss_permille={r.loss_fraction * 1e3:.3f};"
@@ -120,9 +128,9 @@ def fig7_tl_sweep(quick: bool = False) -> ROWS:
     rows = []
     dur = 200_000.0 if quick else 600_000.0
     for tl in (100.0, 300.0, 500.0, 700.0):
-        cfg = SimConfig(adaptive=True, t_long_us=tl, arrival_rate_mpps=14.88,
-                        service_rate_mpps=29.76, duration_us=dur, seed=3)
-        r = simulate(cfg)
+        r = simulate_run(_metronome(t_long_us=tl),
+                         PoissonWorkload(LINE_RATE_MPPS),
+                         SimRunConfig(duration_us=dur, seed=3))
         rows.append((f"fig7/tl_{tl:g}us", tl,
                      f"busy_tries_pct={100 * r.busy_tries / max(r.wakeups, 1):.2f};"
                      f"cpu={r.cpu_fraction:.3f}"))
@@ -134,9 +142,8 @@ def fig8_m_sweep(quick: bool = False) -> ROWS:
     rows = []
     dur = 200_000.0 if quick else 600_000.0
     for m in (2, 3, 4, 5, 6):
-        cfg = SimConfig(m=m, adaptive=True, arrival_rate_mpps=14.88,
-                        service_rate_mpps=29.76, duration_us=dur, seed=4)
-        r = simulate(cfg)
+        r = simulate_run(_metronome(m=m), PoissonWorkload(LINE_RATE_MPPS),
+                         SimRunConfig(duration_us=dur, seed=4))
         rows.append((f"fig8/m_{m}", r.mean_latency_us,
                      f"busy_tries_pct={100 * r.busy_tries / max(r.wakeups, 1):.2f};"
                      f"cpu={r.cpu_fraction:.3f};p99_lat_us={r.p99_latency_us:.2f}"))
@@ -156,17 +163,15 @@ def table3_nanosleep_loss(quick: bool = False) -> ROWS:
     dur = 300_000.0 if quick else 1_500_000.0
     cases = [(1024, 10.0), (2048, 10.0), (4096, 10.0), (4096, 1.0)]
     for qsize, vbar in cases:
-        cfg = SimConfig(adaptive=True, v_target_us=vbar, queue_capacity=qsize,
-                        arrival_rate_mpps=14.88, service_rate_mpps=29.76,
-                        sleep_model=NANOSLEEP_MODEL,
-                        stall_rate_per_us=3.5e-5, stall_mean_us=1_200.0,
-                        duration_us=dur, seed=6)
-        r = simulate(cfg)
-        hr = simulate(SimConfig(adaptive=True, v_target_us=vbar,
-                                queue_capacity=qsize, arrival_rate_mpps=14.88,
-                                service_rate_mpps=29.76,
-                                sleep_model=HR_SLEEP_MODEL,
-                                duration_us=dur, seed=6))
+        wl = PoissonWorkload(LINE_RATE_MPPS)
+        r = simulate_run(_metronome(v_target_us=vbar), wl,
+                         SimRunConfig(duration_us=dur, queue_capacity=qsize,
+                                      sleep_model=NANOSLEEP_MODEL,
+                                      stall_rate_per_us=3.5e-5,
+                                      stall_mean_us=1_200.0, seed=6))
+        hr = simulate_run(_metronome(v_target_us=vbar), wl,
+                          SimRunConfig(duration_us=dur, queue_capacity=qsize,
+                                       sleep_model=HR_SLEEP_MODEL, seed=6))
         rows.append((f"table3/q{qsize}_vbar{vbar:g}us",
                      r.loss_fraction * 100,
                      f"nanosleep_loss_pct={r.loss_fraction * 100:.3f};"
@@ -183,13 +188,13 @@ def fig11_adaptation(quick: bool = False) -> ROWS:
         x = t / dur
         return peak * (2 * x if x < 0.5 else 2 * (1 - x))
 
-    cfg = SimConfig(adaptive=True, arrival_profile=profile, duration_us=dur,
-                    service_rate_mpps=29.76, timeseries_bin_us=dur / 30,
-                    seed=8)
-    r = simulate(cfg)
+    r = simulate_run(_metronome(),
+                     PoissonWorkload(peak, profile=profile),
+                     SimRunConfig(duration_us=dur, timeseries_bin_us=dur / 30,
+                                  seed=8))
     # tracking error between estimated rho and true instantaneous rho
-    t_mid = r.series_t_us + cfg.timeseries_bin_us / 2
-    true_rho = np.array([profile(t) for t in t_mid]) / 29.76
+    t_mid = r.series_t_us + (dur / 30) / 2
+    true_rho = np.array([profile(t) for t in t_mid]) / MU_MPPS
     err = float(np.mean(np.abs(r.rho_series[2:-2] - true_rho[2:-2])))
     served_frac = r.serviced / max(r.offered - r.dropped, 1)
     return [("fig11/adaptation", err,
@@ -202,12 +207,10 @@ def fig12_dpdk_compare(quick: bool = False) -> ROWS:
     rows = []
     dur = 200_000.0 if quick else 800_000.0
     for gbps, lam in ((0.5, 0.744), (1.0, 1.488), (5.0, 7.44), (10.0, 14.88)):
-        met = simulate(SimConfig(adaptive=True, arrival_rate_mpps=lam,
-                                 service_rate_mpps=29.76, duration_us=dur,
-                                 seed=9))
-        dpdk = simulate_busy_poll(SimConfig(arrival_rate_mpps=lam,
-                                            service_rate_mpps=29.76,
-                                            duration_us=dur, seed=9))
+        met = simulate_run(_metronome(), PoissonWorkload(lam),
+                           SimRunConfig(duration_us=dur, seed=9))
+        dpdk = simulate_run(BusyPollPolicy(), PoissonWorkload(lam),
+                            SimRunConfig(duration_us=dur, seed=9))
         rows.append((f"fig12/rate_{gbps:g}gbps", met.mean_latency_us,
                      f"met_cpu={met.cpu_fraction:.3f};dpdk_cpu=1.000;"
                      f"met_lat_us={met.mean_latency_us:.2f};"
@@ -225,19 +228,13 @@ def fig15_applications(quick: bool = False) -> ROWS:
 
     from repro.configs import get_config
     from repro.models import Model
-    from repro.serving import (
-        BusyPollServer,
-        EngineConfig,
-        InferenceEngine,
-        MetronomeServer,
-        Request,
-    )
+    from repro.serving import EngineConfig, InferenceEngine, Request, Server
 
     tiny = dataclasses.replace(
         get_config("granite-3-8b").reduced(), n_layers=2, d_model=32,
         n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64, vocab_size=101)
 
-    def drive(server_cls, rate_hz, n_req, **kw):
+    def drive(policy, rate_hz, n_req):
         model = Model(tiny)
         params = model.init(jax.random.PRNGKey(0), max_seq=64)
         eng = InferenceEngine(model, params,
@@ -245,7 +242,7 @@ def fig15_applications(quick: bool = False) -> ROWS:
                                            prefill_buckets=(8,)))
         warm = Request(prompt=[1, 2], max_new_tokens=2)
         eng.submit([warm]); eng.pump()
-        srv = server_cls(eng, **kw)
+        srv = Server(eng, policy)
         srv.start()
         reqs = []
         for i in range(n_req):
@@ -262,9 +259,9 @@ def fig15_applications(quick: bool = False) -> ROWS:
     n = 8 if quick else 24
     for rate in (20.0, 60.0):
         m_st, m_ok, m_lat = drive(
-            MetronomeServer, rate, n,
-            cfg=MetronomeConfig(m=3, v_target_us=3_000.0, t_long_us=60_000.0))
-        b_st, b_ok, b_lat = drive(BusyPollServer, rate, n)
+            MetronomePolicy(MetronomeConfig(m=3, v_target_us=3_000.0,
+                                            t_long_us=60_000.0)), rate, n)
+        b_st, b_ok, b_lat = drive(BusyPollPolicy(), rate, n)
         assert m_ok and b_ok
         rows.append((f"fig15/token_service_{rate:g}hz", m_lat,
                      f"met_cpu={m_st.cpu_fraction:.3f};"

@@ -18,6 +18,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks.kernels_bench import kernels
+    from benchmarks.policy_matrix import matrix_policies_workloads
     from benchmarks.paper_tables import (
         fig2_sleep_cpu,
         fig5_vacation_pdf,
@@ -36,7 +37,7 @@ def main() -> None:
         table1_sleep_precision, fig2_sleep_cpu, fig5_vacation_pdf,
         table2_vbar_tuning, fig7_tl_sweep, fig8_m_sweep,
         table3_nanosleep_loss, fig11_adaptation, fig12_dpdk_compare,
-        fig15_applications, kernels, roofline,
+        matrix_policies_workloads, fig15_applications, kernels, roofline,
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -12,7 +12,8 @@ import jax
 from repro.configs import get_config
 from repro.core import MetronomeConfig
 from repro.models import Model
-from repro.serving import EngineConfig, InferenceEngine, MetronomeServer, Request
+from repro.runtime import MetronomePolicy
+from repro.serving import EngineConfig, InferenceEngine, Request, Server
 
 TINY = dataclasses.replace(
     get_config("granite-3-8b").reduced(), n_layers=2, d_model=32,
@@ -28,8 +29,9 @@ def main():
     warm = Request(prompt=[1, 2], max_new_tokens=2)
     engine.submit([warm]); engine.pump()
 
-    server = MetronomeServer(
-        engine, MetronomeConfig(m=3, v_target_us=2_000.0, t_long_us=40_000.0))
+    policy = MetronomePolicy(
+        MetronomeConfig(m=3, v_target_us=2_000.0, t_long_us=40_000.0))
+    server = Server(engine, policy)
     server.start()
 
     # triangular rate profile: 5 -> 80 -> 5 req/s over ~12 s
@@ -45,8 +47,8 @@ def main():
             time.sleep(1.0 / rate)
         elapsed = time.monotonic_ns() - server.stats.started_ns
         cpu = server.stats.awake_ns / max(elapsed, 1)
-        print(f"{rate:>8} {server.controller.rho:>7.3f} "
-              f"{server.controller.t_short_us:>8.1f} {cpu:>11.3f}")
+        print(f"{rate:>8} {policy.rho:>7.3f} "
+              f"{policy.t_short_us:>8.1f} {cpu:>11.3f}")
     done = sum(1 for r in submitted if r.wait(20.0))
     stats = server.stop()
     print(f"\ncompleted {done}/{len(submitted)} requests; "

@@ -12,7 +12,8 @@ import jax
 from repro.configs import get_config
 from repro.core import MetronomeConfig
 from repro.models import Model
-from repro.serving import EngineConfig, InferenceEngine, MetronomeServer, Request
+from repro.runtime import MetronomePolicy
+from repro.serving import EngineConfig, InferenceEngine, Request, Server
 from repro.train import OptConfig, train_loop
 
 TINY = dataclasses.replace(
@@ -36,8 +37,10 @@ def main():
     warm = Request(prompt=[1, 2], max_new_tokens=2)
     engine.submit([warm]); engine.pump()          # compile caches
 
-    server = MetronomeServer(
-        engine, MetronomeConfig(m=3, v_target_us=2_000.0, t_long_us=50_000.0))
+    # the same policy object would run in repro.runtime.simulate_run
+    policy = MetronomePolicy(
+        MetronomeConfig(m=3, v_target_us=2_000.0, t_long_us=50_000.0))
+    server = Server(engine, policy)
     server.start()
     reqs = [Request(prompt=[i + 1, i + 2, i + 3], max_new_tokens=6)
             for i in range(8)]
@@ -49,10 +52,9 @@ def main():
     stats = server.stop()
     for r in reqs[:3]:
         print(f"req {r.id}: prompt={r.prompt} -> tokens={r.tokens}")
-    print(f"host CPU fraction (sum over {server.cfg.m} pollers): "
+    print(f"host CPU fraction (sum over {policy.threads} pollers): "
           f"{stats.cpu_fraction:.3f}  (busy-poll baseline would be 1.0)")
-    print(f"controller: rho={server.controller.rho:.3f} "
-          f"T_S={server.controller.t_short_us:.0f}us")
+    print(f"controller: rho={policy.rho:.3f} T_S={policy.t_short_us:.0f}us")
 
 
 if __name__ == "__main__":

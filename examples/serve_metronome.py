@@ -1,6 +1,7 @@
 """End-to-end serving driver (the paper's experiment, serving edition):
 a token-generation service under Poisson request load, comparing
-Metronome sleep&wake retrieval against the busy-poll baseline.
+retrieval policies through the unified ``repro.runtime`` API — the same
+policy objects the simulator executes.
 
 Reports the paper's metrics: host CPU fraction, time-to-first-token,
 retrieval latency, completed requests — at several offered rates.
@@ -18,13 +19,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import MetronomeConfig
 from repro.models import Model
-from repro.serving import (
-    BusyPollServer,
-    EngineConfig,
-    InferenceEngine,
-    MetronomeServer,
-    Request,
-)
+from repro.runtime import BusyPollPolicy, FixedPeriodPolicy, MetronomePolicy
+from repro.serving import EngineConfig, InferenceEngine, Request, Server
 
 TINY = dataclasses.replace(
     get_config("gemma-2b").reduced(), n_layers=2, d_model=32,
@@ -43,7 +39,10 @@ def make_engine():
     return eng
 
 
-def drive(server, n_req, rate_hz, rng):
+def drive(policy, n_req, rate_hz, rng):
+    # servers are constructed fresh per run (their engine holds slot state)
+    server = Server(make_engine(), policy)
+    server.start()
     reqs = []
     for i in range(n_req):
         r = Request(prompt=[(i % 200) + 1, (i % 200) + 2], max_new_tokens=6)
@@ -64,18 +63,19 @@ def main():
     ap.add_argument("--requests", type=int, default=30)
     args = ap.parse_args()
 
-    print(f"{'rate':>8} {'server':>10} {'cpu':>7} {'ttft_ms':>9} "
+    policies = [
+        ("metronome", lambda: MetronomePolicy(
+            MetronomeConfig(m=3, v_target_us=3_000.0, t_long_us=60_000.0))),
+        ("fixed-3ms", lambda: FixedPeriodPolicy(3_000.0, threads=1)),
+        ("busy-poll", lambda: BusyPollPolicy()),
+    ]
+    print(f"{'rate':>8} {'policy':>10} {'cpu':>7} {'ttft_ms':>9} "
           f"{'retr_us':>9} {'wakeups':>8}")
     for rate in (15.0, 40.0, 80.0):
-        rng = np.random.default_rng(0)
-        met = drive(MetronomeServer(
-            make_engine(),
-            MetronomeConfig(m=3, v_target_us=3_000.0, t_long_us=60_000.0)),
-            args.requests, rate, rng)
-        rng = np.random.default_rng(0)
-        bp = drive(BusyPollServer(make_engine()), args.requests, rate, rng)
-        assert met["ok"] and bp["ok"]
-        for name, r in (("metronome", met), ("busy-poll", bp)):
+        for name, make_policy in policies:
+            rng = np.random.default_rng(0)
+            r = drive(make_policy(), args.requests, rate, rng)
+            assert r["ok"]
             print(f"{rate:>8.0f} {name:>10} {r['cpu']:>7.3f} "
                   f"{r['ttft_ms']:>9.2f} {r['retr_us']:>9.0f} "
                   f"{r['wakeups']:>8}")
@@ -85,6 +85,3 @@ def main():
 
 if __name__ == "__main__":
     main()
-
-# Servers must be constructed fresh per run (their engine holds slot
-# state); `drive` stops them.

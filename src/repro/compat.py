@@ -1,0 +1,30 @@
+"""Version compatibility shims for the jax API surface this repo uses.
+
+The repo targets the modern spellings (``jax.shard_map`` with
+``check_vma``, dict-valued ``Compiled.cost_analysis()``); older jaxlib
+builds (0.4.x) ship ``jax.experimental.shard_map.shard_map`` with
+``check_rep`` and return ``cost_analysis()`` as a one-element list.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "cost_analysis_dict"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a dict across jax versions."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)

@@ -4,25 +4,34 @@
 - controller: EWMA load estimate + adaptive T_S rule (Eqs 10/12)
 - hr_sleep:   precise userspace hybrid sleep (paper Sec 3.1 adaptation)
 - trylock:    non-blocking queue ownership (paper Sec 3.2)
-- pollers:    real-thread runtime (paper Listing 2) + busy-poll baseline
-- simulator:  discrete-event renewal simulator (paper Sec 5 apparatus)
+- pollers:    DEPRECATED shims over repro.runtime (paper Listing 2 loop)
+- simulator:  DEPRECATED shims over repro.runtime.sim (paper Sec 5)
+
+The retrieval loops and the simulator moved to ``repro.runtime`` (one
+pluggable policy × workload API with sim/real parity); their old names
+are still importable from here and resolve lazily to the new package, so
+``from repro.core import MetronomePollers, simulate`` keeps working.
 """
 
 from . import analytics
 from .controller import MetronomeConfig, MetronomeController
 from .hr_sleep import calibrate, hr_sleep, make_hr_sleep, measure_precision, naive_sleep
-from .pollers import BoundedQueue, BusyPollLoop, MetronomePollers, PollerStats
-from .simulator import (
-    HR_SLEEP_MODEL,
-    NANOSLEEP_MODEL,
-    PERFECT_SLEEP_MODEL,
-    SimConfig,
-    SimResult,
-    SleepModel,
-    simulate,
-    simulate_busy_poll,
-)
 from .trylock import TryLock
+
+# Names re-exported lazily (PEP 562) from the modules that now shim onto
+# repro.runtime.  Lazy so that `import repro.runtime` -> policy ->
+# repro.core.controller doesn't re-enter a half-initialized repro.runtime.
+_POLLERS = ("BoundedQueue", "BusyPollLoop", "MetronomePollers", "PollerStats")
+_SIMULATOR = (
+    "HR_SLEEP_MODEL",
+    "NANOSLEEP_MODEL",
+    "PERFECT_SLEEP_MODEL",
+    "SimConfig",
+    "SimResult",
+    "SleepModel",
+    "simulate",
+    "simulate_busy_poll",
+)
 
 __all__ = [
     "analytics",
@@ -33,17 +42,21 @@ __all__ = [
     "make_hr_sleep",
     "measure_precision",
     "naive_sleep",
-    "BoundedQueue",
-    "BusyPollLoop",
-    "MetronomePollers",
-    "PollerStats",
-    "HR_SLEEP_MODEL",
-    "NANOSLEEP_MODEL",
-    "PERFECT_SLEEP_MODEL",
-    "SimConfig",
-    "SimResult",
-    "SleepModel",
-    "simulate",
-    "simulate_busy_poll",
     "TryLock",
+    *_POLLERS,
+    *_SIMULATOR,
 ]
+
+
+def __getattr__(name: str):
+    if name in _POLLERS:
+        from . import pollers
+        return getattr(pollers, name)
+    if name in _SIMULATOR:
+        from . import simulator
+        return getattr(simulator, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,104 +1,46 @@
-"""Real-thread Metronome runtime — paper Listing 2, deployed.
+"""Deprecated shims: the real-thread loops now live in ``repro.runtime``.
 
-``MetronomePollers`` runs M OS threads against one or more shared bounded
-queues.  Each thread executes the paper's loop verbatim:
+``MetronomePollers`` / ``BusyPollLoop`` used to hand-roll the paper's
+Listing-2 / Listing-1 loops here; both are now thin wrappers over the
+generic ``repro.runtime.Runtime`` parameterized by a ``RetrievalPolicy``
+(``MetronomePolicy`` / ``BusyPollPolicy``).  Prefer the new API:
 
-    while running:
-        lock_taken = False
-        for q in queues:
-            if not trylock(q):   continue
-            lock_taken = True
-            while burst := q.poll(BURST):  process(burst)   # busy period
-            unlock(q)
-        hr_sleep(T_S if lock_taken else T_L)                 # Listing 2 l.11-14
+    from repro.runtime import Runtime, MetronomePolicy
+    rt = Runtime([queue], process, MetronomePolicy(cfg))
 
-with the adaptive controller (Eq 10/12) updating T_S after every cycle.
-``BusyPollLoop`` is the classic DPDK baseline (Listing 1) for comparisons.
-
-This runtime fronts the serving engine (serving/server.py): the "packets"
-are inference requests and ``process`` hands batches to the
-continuous-batching scheduler.  CPU accounting uses per-thread CPU time
-(time.thread_time_ns around the loop body) — the userspace analogue of the
-paper's getrusage() methodology, immune to descheduling on shared hosts.
+These names are kept so existing imports keep working; they emit a
+``DeprecationWarning`` on construction.  ``PollerStats`` is the unified
+``repro.runtime.RunStats`` under its old name (all old field names —
+wakeups, cycles, busy_tries, items, awake_ns, cpu_fraction,
+latency_samples_us — resolve on it).
 """
 
 from __future__ import annotations
 
-import collections
-import threading
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable
+import warnings
+from typing import Callable
 
-from .controller import MetronomeConfig, MetronomeController
+from repro.runtime.policy import BusyPollPolicy, MetronomePolicy
+from repro.runtime.queues import BoundedQueue
+from repro.runtime.runtime import Runtime
+from repro.runtime.stats import RunStats as PollerStats
+
+from .controller import MetronomeConfig
 from .hr_sleep import hr_sleep
-from .trylock import TryLock
 
 __all__ = ["BoundedQueue", "PollerStats", "MetronomePollers", "BusyPollLoop"]
 
 
-class BoundedQueue:
-    """Bounded MPSC-ish queue standing in for the NIC Rx descriptor ring.
-
-    ``push`` drops (and counts) on overflow — Rx-ring semantics, paper
-    Table 2/3 loss accounting.  ``poll`` is only called under the queue's
-    TryLock, so a plain deque suffices (append is GIL-atomic for pushers).
-    """
-
-    __slots__ = ("_q", "capacity", "dropped", "offered", "lock", "last_busy_end_ns")
-
-    def __init__(self, capacity: int = 1024):
-        self._q: collections.deque = collections.deque()
-        self.capacity = capacity
-        self.dropped = 0
-        self.offered = 0
-        self.lock = TryLock()
-        self.last_busy_end_ns = time.monotonic_ns()
-
-    def push(self, item: Any) -> bool:
-        self.offered += 1
-        if len(self._q) >= self.capacity:
-            self.dropped += 1
-            return False
-        self._q.append((time.monotonic_ns(), item))
-        return True
-
-    def poll(self, max_items: int) -> list[tuple[int, Any]]:
-        out = []
-        q = self._q
-        for _ in range(min(max_items, len(q))):
-            try:
-                out.append(q.popleft())
-            except IndexError:  # racing pushers can't cause this; be safe
-                break
-        return out
-
-    def __len__(self) -> int:
-        return len(self._q)
+def _warn(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.core.pollers.{old} is deprecated; use {new} from "
+        "repro.runtime instead",
+        DeprecationWarning, stacklevel=3)
 
 
-@dataclass
-class PollerStats:
-    wakeups: int = 0
-    cycles: int = 0
-    busy_tries: int = 0
-    items: int = 0
-    awake_ns: int = 0
-    started_ns: int = 0
-    stopped_ns: int = 0
-    latency_samples_us: list = field(default_factory=list)
+class MetronomePollers(Runtime):
+    """Deprecated alias for ``Runtime`` + ``MetronomePolicy``."""
 
-    @property
-    def duration_ns(self) -> int:
-        return max(self.stopped_ns - self.started_ns, 1)
-
-    @property
-    def cpu_fraction(self) -> float:
-        """Sum of thread awake time over wall duration (can exceed 1.0)."""
-        return self.awake_ns / self.duration_ns
-
-
-class MetronomePollers:
     def __init__(
         self,
         queues: list[BoundedQueue],
@@ -109,119 +51,20 @@ class MetronomePollers:
         sleep_fn: Callable[[int], None] = hr_sleep,
         latency_sample_every: int = 16,
     ):
-        self.queues = queues
-        self.process = process
+        _warn("MetronomePollers", "Runtime(queues, process, MetronomePolicy(cfg))")
         self.cfg = cfg or MetronomeConfig()
-        self.controller = MetronomeController(self.cfg)
-        self.burst_size = burst_size
-        self.sleep_fn = sleep_fn
-        self.stats = PollerStats()
-        self._stats_lock = threading.Lock()
-        self._running = threading.Event()
-        self._threads: list[threading.Thread] = []
-        self._lat_every = latency_sample_every
-
-    # -- lifecycle -------------------------------------------------------------
-    def start(self) -> None:
-        self.stats = PollerStats(started_ns=time.monotonic_ns())
-        self._running.set()
-        self._threads = [
-            threading.Thread(target=self._run, name=f"metronome-{i}", daemon=True)
-            for i in range(self.cfg.m)
-        ]
-        for t in self._threads:
-            t.start()
-
-    def stop(self, timeout: float = 5.0) -> PollerStats:
-        self._running.clear()
-        for t in self._threads:
-            t.join(timeout)
-        self.stats.stopped_ns = time.monotonic_ns()
-        for q in self.queues:
-            self.stats.busy_tries = sum(qq.lock.busy_tries for qq in self.queues)
-        return self.stats
-
-    # -- the paper's loop --------------------------------------------------------
-    def _run(self) -> None:
-        ctrl = self.controller
-        st = self.stats
-        wake = 0
-        while self._running.is_set():
-            t_wake = time.monotonic_ns()
-            t_cpu0 = time.thread_time_ns()
-            lock_taken = False
-            items = 0
-            for q in self.queues:
-                if not q.lock.try_acquire():
-                    continue
-                lock_taken = True
-                try:
-                    vacation_ns = t_wake - q.last_busy_end_ns
-                    busy_start = time.monotonic_ns()
-                    while True:
-                        burst = q.poll(self.burst_size)
-                        if not burst:
-                            break
-                        items += len(burst)
-                        if wake % self._lat_every == 0 and burst:
-                            now = time.monotonic_ns()
-                            sample = [(now - ts) / 1e3 for ts, _ in burst[:4]]
-                            with self._stats_lock:
-                                st.latency_samples_us.extend(sample)
-                        self.process([it for _, it in burst])
-                    busy_end = time.monotonic_ns()
-                    q.last_busy_end_ns = busy_end
-                    ctrl.on_cycle_end((busy_end - busy_start) / 1e3,
-                                      max(vacation_ns / 1e3, 1e-3))
-                finally:
-                    q.lock.release()
-            t_cpu1 = time.thread_time_ns()
-            with self._stats_lock:
-                st.wakeups += 1
-                st.awake_ns += t_cpu1 - t_cpu0
-                st.items += items
-                if lock_taken:
-                    st.cycles += 1
-            wake += 1
-            self.sleep_fn(ctrl.timeout_ns(primary=lock_taken))
+        policy = MetronomePolicy(self.cfg)
+        super().__init__(queues, process, policy, burst_size=burst_size,
+                         sleep_fn=sleep_fn,
+                         latency_sample_every=latency_sample_every)
+        self.controller = policy.controller
 
 
-class BusyPollLoop:
-    """Classic DPDK loop (paper Listing 1): one dedicated spinning thread."""
+class BusyPollLoop(Runtime):
+    """Deprecated alias for ``Runtime`` + ``BusyPollPolicy``."""
 
-    def __init__(self, queues: list[BoundedQueue], process: Callable[[list], None],
-                 *, burst_size: int = 32):
-        self.queues = queues
-        self.process = process
-        self.burst_size = burst_size
-        self.stats = PollerStats()
-        self._running = threading.Event()
-        self._thread: threading.Thread | None = None
-
-    def start(self) -> None:
-        self.stats = PollerStats(started_ns=time.monotonic_ns())
-        self._running.set()
-        self._thread = threading.Thread(target=self._run, name="busypoll", daemon=True)
-        self._thread.start()
-
-    def stop(self, timeout: float = 5.0) -> PollerStats:
-        self._running.clear()
-        if self._thread:
-            self._thread.join(timeout)
-        self.stats.stopped_ns = time.monotonic_ns()
-        # By construction the loop never sleeps: CPU fraction is ~1.0.
-        self.stats.awake_ns = self.stats.duration_ns
-        return self.stats
-
-    def _run(self) -> None:
-        st = self.stats
-        while self._running.is_set():
-            st.wakeups += 1
-            for q in self.queues:
-                burst = q.poll(self.burst_size)
-                if not burst:
-                    continue
-                st.items += len(burst)
-                now = time.monotonic_ns()
-                st.latency_samples_us.extend((now - ts) / 1e3 for ts, _ in burst[:2])
-                self.process([it for _, it in burst])
+    def __init__(self, queues: list[BoundedQueue],
+                 process: Callable[[list], None], *, burst_size: int = 32):
+        _warn("BusyPollLoop", "Runtime(queues, process, BusyPollPolicy())")
+        super().__init__(queues, process, BusyPollPolicy(),
+                         burst_size=burst_size)

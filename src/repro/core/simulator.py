@@ -1,32 +1,42 @@
-"""Discrete-event simulator of the Metronome renewal system (paper Sec 4/5).
+"""Deprecated shim: the discrete-event simulator lives in ``repro.runtime``.
 
-Reproduces the paper's experimental apparatus in a hardware-independent way:
-M pollers share one Rx queue; packets arrive (Poisson or CBR, optionally
-time-varying); a waking poller races for the queue lock; the winner drains
-at deterministic rate mu; losers re-sleep T_L.  Sleep overshoot follows a
-*measured-from-the-paper* affine model (Table 1): hr_sleep ~ +3.5us,
-nanosleep ~ +58us — so the simulator can answer "what if Metronome ran on
-nanosleep?" (paper Table 3) without kernel patches.
+The engine (``repro.runtime.sim.simulate_run``) now executes any
+``RetrievalPolicy`` against any ``Workload``; this module keeps the
+original paper-specific surface — ``SimConfig`` (one flat dataclass of
+paper knobs), ``SimResult``, ``simulate``, ``simulate_busy_poll`` — as a
+thin translation layer:
 
-Aggregate-exact accounting: between events arrivals are Poisson *counts*
-(no per-packet events), busy periods use the standard sub-busy-period
-recursion (serve backlog, collect arrivals meanwhile, repeat), so a 10s
-line-rate simulation costs O(#cycles), not O(#packets).
+    SimConfig(adaptive=..., equal_timeouts=...)  ->  MetronomePolicy /
+                                                     EqualTimeoutsPolicy
+    SimConfig(arrival_rate_mpps / arrival_profile) -> PoissonWorkload
+    everything else                              ->  SimRunConfig
 
-Outputs per run (SimResult): cycle samples (V, B, N_V), loss fraction,
-CPU usage (awake-time fraction, the paper's getrusage proxy), busy tries,
-mean/worst latency, and time series for the adaptation plots (Fig 11).
+Prefer the new API for new code:
+
+    from repro.runtime import MetronomePolicy, PoissonWorkload, simulate_run
+    stats = simulate_run(MetronomePolicy(cfg), PoissonWorkload(14.88))
 """
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import Callable
 
 import numpy as np
 
-from .analytics import adaptive_ts, ewma_rho
+from repro.runtime.policy import EqualTimeoutsPolicy, MetronomePolicy
+from repro.runtime.sim import (
+    HR_SLEEP_MODEL,
+    NANOSLEEP_MODEL,
+    PERFECT_SLEEP_MODEL,
+    SimRunConfig,
+    SleepModel,
+    simulate_run,
+)
+from repro.runtime.stats import RunStats
+from repro.runtime.workload import PoissonWorkload
+
+from .controller import MetronomeConfig
 
 __all__ = [
     "SleepModel",
@@ -41,44 +51,9 @@ __all__ = [
 
 
 @dataclass(frozen=True)
-class SleepModel:
-    """actual = target + base + slope*target + |N(0, sigma)|
-              + Exp(tail_mean) w.p. tail_prob            (us units).
-
-    Fitted to paper Table 1 (mean/p99):
-      hr_sleep :  base ~ 2.8us, slope ~ 0.027, sigma ~ 0.5   (mean +3.5..8.4)
-      nanosleep:  base ~ 57.5us, slope ~ 0.003, sigma ~ 3.0  (mean +58 flat)
-    The nanosleep arm additionally carries a heavy preemption tail —
-    without it the simulator under-loses vs the paper's Table 3 (a +58us
-    mean backlogs < 1024 descriptors; the paper still lost 3.9% at a 4096
-    ring, implying rare multi-hundred-us pile-ups).  Tail parameters chosen
-    so the q=1024..4096 loss ladder brackets the paper's.
-    """
-
-    base_us: float
-    slope: float
-    sigma_us: float
-    tail_prob: float = 0.0
-    tail_mean_us: float = 0.0
-
-    def sample(self, target_us: np.ndarray | float, rng: np.random.Generator):
-        t = np.asarray(target_us, dtype=np.float64)
-        noise = np.abs(rng.normal(0.0, self.sigma_us, size=t.shape))
-        out = t + self.base_us + self.slope * t + noise
-        if self.tail_prob:
-            hit = rng.random(size=t.shape) < self.tail_prob
-            out = out + hit * rng.exponential(self.tail_mean_us, size=t.shape)
-        return out
-
-
-HR_SLEEP_MODEL = SleepModel(base_us=2.8, slope=0.027, sigma_us=0.5)
-NANOSLEEP_MODEL = SleepModel(base_us=57.5, slope=0.003, sigma_us=3.0,
-                             tail_prob=0.01, tail_mean_us=400.0)
-PERFECT_SLEEP_MODEL = SleepModel(base_us=0.0, slope=0.0, sigma_us=0.0)
-
-
-@dataclass(frozen=True)
 class SimConfig:
+    """Legacy flat knob set (paper Sec 5 defaults) — see module docstring."""
+
     m: int = 3
     arrival_rate_mpps: float = 14.88          # lambda  (packets / us)
     service_rate_mpps: float = 29.76          # mu      (packets / us)
@@ -91,22 +66,41 @@ class SimConfig:
     equal_timeouts: bool = False              # T_L := T_S (Fig 5/7 scenarios)
     sleep_model: SleepModel = HR_SLEEP_MODEL
     wake_cost_us: float = 1.0                 # poll+return CPU cost per wake
-    # OS interference (paper Sec 5.6): each wake delayed by Exp(mean) w.p. q.
     interference_prob: float = 0.0
     interference_mean_us: float = 0.0
-    # Correlated stalls: Poisson system-wide freeze events delaying EVERY
-    # wake that falls inside them (kernel timer-wheel/preemption pile-ups).
-    # Needed to reproduce the paper's Table-3 weak queue-size dependence:
-    # uncorrelated per-thread tails are absorbed by the backup threads
-    # (Metronome's own resilience), so only correlated stalls overflow a
-    # 4096-descriptor ring.
     stall_rate_per_us: float = 0.0
     stall_mean_us: float = 0.0
-    # Time-varying load for adaptation runs: t_us -> lambda (packets/us).
     arrival_profile: Callable[[float], float] | None = None
     seed: int = 0
     ts_min_us: float = 1.0
     timeseries_bin_us: float = 0.0            # >0: emit binned time series
+
+    # -- new-API decomposition -------------------------------------------------
+    def policy(self):
+        mcfg = MetronomeConfig(m=self.m, v_target_us=self.v_target_us,
+                               t_long_us=self.t_long_us, alpha=self.alpha,
+                               ts_min_us=self.ts_min_us)
+        cls = EqualTimeoutsPolicy if self.equal_timeouts else MetronomePolicy
+        return cls(mcfg, adaptive=self.adaptive)
+
+    def workload(self) -> PoissonWorkload:
+        return PoissonWorkload(self.arrival_rate_mpps,
+                               profile=self.arrival_profile)
+
+    def run_config(self) -> SimRunConfig:
+        return SimRunConfig(
+            duration_us=self.duration_us,
+            service_rate_mpps=self.service_rate_mpps,
+            queue_capacity=self.queue_capacity,
+            sleep_model=self.sleep_model,
+            wake_cost_us=self.wake_cost_us,
+            interference_prob=self.interference_prob,
+            interference_mean_us=self.interference_mean_us,
+            stall_rate_per_us=self.stall_rate_per_us,
+            stall_mean_us=self.stall_mean_us,
+            seed=self.seed,
+            timeseries_bin_us=self.timeseries_bin_us,
+        )
 
 
 @dataclass
@@ -145,200 +139,31 @@ class SimResult:
     def mean_nv(self) -> float:
         return float(np.mean(self.n_v)) if self.n_v.size else 0.0
 
-
-def _drain(backlog: float, lam: float, mu: float, rng: np.random.Generator,
-           max_rounds: int = 64) -> tuple[float, int]:
-    """Busy-period recursion: serve `backlog`, Poisson arrivals meanwhile.
-
-    Returns (busy_duration_us, packets_served).  Guaranteed to terminate for
-    lam < mu; at saturation the round cap bounds the step (callers loop).
-    """
-    total_t = 0.0
-    served = 0.0
-    rounds = 0
-    while backlog >= 1.0 and rounds < max_rounds:
-        dt = backlog / mu
-        served += backlog
-        total_t += dt
-        backlog = rng.poisson(lam * dt) if lam > 0 else 0.0
-        rounds += 1
-    return total_t, int(served)
+    @classmethod
+    def from_run_stats(cls, rs: RunStats) -> "SimResult":
+        return cls(
+            vacations_us=rs.vacations_us, busies_us=rs.busies_us, n_v=rs.n_v,
+            offered=rs.offered, dropped=rs.dropped, serviced=rs.items,
+            busy_tries=rs.busy_tries, wakeups=rs.wakeups,
+            cpu_fraction=rs.cpu_fraction,
+            mean_latency_us=rs.mean_latency_us,
+            p99_latency_us=rs.p99_latency_us,
+            worst_latency_us=rs.worst_latency_us,
+            rho_series=rs.rho_series, ts_series=rs.ts_series,
+            tput_series_mpps=rs.tput_series_mpps,
+            offered_series_mpps=rs.offered_series_mpps,
+            series_t_us=rs.series_t_us,
+        )
 
 
 def simulate(cfg: SimConfig) -> SimResult:
-    rng = np.random.default_rng(cfg.seed)
-    m = cfg.m
-    mu = cfg.service_rate_mpps
-    lam_of = cfg.arrival_profile or (lambda t: cfg.arrival_rate_mpps)
-
-    # Thread state: next wake time; whether it last acted as primary.
-    t_s = cfg.v_target_us if not cfg.adaptive else float(
-        adaptive_ts(cfg.v_target_us, 0.5, m, ts_min=cfg.ts_min_us,
-                    ts_max=m * cfg.v_target_us))
-    rho = 0.5
-    # Threads are launched actively (paper Sec 5): first wakes land within
-    # one short timeout, not spread over T_L (that would fabricate a startup
-    # backlog transient the real system does not have).
-    wake_at = rng.uniform(0.0, t_s, size=m)
-
-    backlog = 0.0
-    last_advanced = 0.0      # arrivals accounted up to here
-    busy_until = 0.0         # lock held until this time
-    last_busy_end = 0.0
-
-    offered = dropped = serviced = busy_tries = wakeups = 0
-    vac, bus, nvs = [], [], []
-    lat_samples: list[float] = []
-    awake_us = 0.0
-
-    nbins = int(cfg.duration_us / cfg.timeseries_bin_us) if cfg.timeseries_bin_us else 0
-    b_rho = np.zeros(max(nbins, 1)); b_ts = np.zeros(max(nbins, 1))
-    b_srv = np.zeros(max(nbins, 1)); b_off = np.zeros(max(nbins, 1))
-    b_cnt = np.zeros(max(nbins, 1))
-
-    def advance_arrivals(to_t: float) -> None:
-        """Accumulate Poisson arrivals on [last_advanced, to_t); count drops."""
-        nonlocal backlog, offered, dropped, last_advanced
-        dt = to_t - last_advanced
-        if dt <= 0:
-            return
-        lam = lam_of(last_advanced)
-        n = int(rng.poisson(lam * dt)) if lam > 0 else 0
-        offered += n
-        room = cfg.queue_capacity - backlog
-        if n > room:
-            dropped += int(n - max(room, 0))
-            n = int(max(room, 0))
-        backlog += n
-        if nbins:
-            b = min(int(last_advanced / cfg.timeseries_bin_us), nbins - 1)
-            b_off[b] += n + 0.0
-        last_advanced = to_t
-
-    # correlated stall windows (lazy Poisson process)
-    next_stall = (rng.exponential(1.0 / cfg.stall_rate_per_us)
-                  if cfg.stall_rate_per_us else np.inf)
-    stall_end = -1.0
-
-    while True:
-        i = int(np.argmin(wake_at))
-        t = float(wake_at[i])
-        if t >= cfg.duration_us:
-            break
-        if cfg.stall_rate_per_us:
-            while next_stall <= t:
-                stall_end = max(stall_end,
-                                next_stall + rng.exponential(cfg.stall_mean_us))
-                next_stall += rng.exponential(1.0 / cfg.stall_rate_per_us)
-            if t < stall_end:
-                wake_at[i] = stall_end + rng.uniform(0.0, 1.0)
-                continue
-        wakeups += 1
-        awake_us += cfg.wake_cost_us
-        advance_arrivals(t)
-
-        if t < busy_until:
-            # trylock failed: another poller is draining => backup role.
-            busy_tries += 1
-            t_l = t_s if cfg.equal_timeouts else cfg.t_long_us
-            delay = float(cfg.sleep_model.sample(t_l, rng))
-            if cfg.interference_prob and rng.random() < cfg.interference_prob:
-                delay += rng.exponential(cfg.interference_mean_us)
-            wake_at[i] = t + delay
-            continue
-
-        # trylock won: primary. Vacation ended at t.
-        v = t - last_busy_end
-        n_v = backlog
-        lam_now = lam_of(t)
-        b_time, srv = _drain(backlog, min(lam_now, 0.98 * mu), mu, rng)
-        backlog = 0.0
-        # arrivals during the busy period were consumed by _drain: account them.
-        offered += max(srv - int(n_v), 0)
-        serviced += srv
-        last_advanced = max(last_advanced, t + b_time)
-        busy_until = t + b_time
-        last_busy_end = busy_until
-        awake_us += b_time
-
-        vac.append(v); bus.append(b_time); nvs.append(n_v)
-        # Latency: packets found at busy start waited (uniform arrival in V)
-        # V/2 on average + their drain position; packets arriving during B
-        # wait ~ residual drain.  Sample a handful per cycle for percentiles.
-        if n_v >= 1:
-            k = min(int(n_v), 8)
-            arr = rng.uniform(0.0, max(v, 1e-9), size=k)         # age at t
-            pos = np.sort(rng.uniform(0.0, n_v, size=k)) / mu    # drain slot
-            lat_samples.extend((max(v, 1e-9) - arr + pos).tolist())
-
-        if cfg.adaptive:
-            rho = float(ewma_rho(rho, b_time, max(v, 1e-9), cfg.alpha))
-            t_s = float(adaptive_ts(cfg.v_target_us, rho, m,
-                                    ts_min=cfg.ts_min_us,
-                                    ts_max=m * cfg.v_target_us))
-        if nbins:
-            b = min(int(t / cfg.timeseries_bin_us), nbins - 1)
-            b_rho[b] += rho; b_ts[b] += t_s; b_srv[b] += srv; b_cnt[b] += 1
-
-        delay = float(cfg.sleep_model.sample(t_s, rng))
-        if cfg.interference_prob and rng.random() < cfg.interference_prob:
-            delay += rng.exponential(cfg.interference_mean_us)
-        wake_at[i] = busy_until + delay
-
-    lat = np.asarray(lat_samples) if lat_samples else np.zeros(1)
-    nbins_eff = max(nbins, 1)
-    cnt = np.maximum(b_cnt, 1)
-    return SimResult(
-        vacations_us=np.asarray(vac),
-        busies_us=np.asarray(bus),
-        n_v=np.asarray(nvs),
-        offered=offered, dropped=dropped, serviced=serviced,
-        busy_tries=busy_tries, wakeups=wakeups,
-        cpu_fraction=awake_us / cfg.duration_us,
-        mean_latency_us=float(np.mean(lat)),
-        p99_latency_us=float(np.percentile(lat, 99)),
-        worst_latency_us=float(np.max(lat)),
-        rho_series=b_rho / cnt if nbins else np.empty(0),
-        ts_series=b_ts / cnt if nbins else np.empty(0),
-        tput_series_mpps=(b_srv / cfg.timeseries_bin_us) if nbins else np.empty(0),
-        offered_series_mpps=(b_off / cfg.timeseries_bin_us) if nbins else np.empty(0),
-        series_t_us=(np.arange(nbins_eff) * cfg.timeseries_bin_us) if nbins else np.empty(0),
-    )
+    rs = simulate_run(cfg.policy(), cfg.workload(), cfg.run_config())
+    return SimResult.from_run_stats(rs)
 
 
 def simulate_busy_poll(cfg: SimConfig) -> SimResult:
-    """Baseline: classic DPDK continuous polling (paper Listing 1).
+    """Baseline: classic DPDK continuous polling (paper Listing 1)."""
+    from repro.runtime.policy import BusyPollPolicy
 
-    One dedicated core spins; CPU is 100% by construction; latency is just
-    the drain position (no vacations); loss only beyond saturation.
-    """
-    rng = np.random.default_rng(cfg.seed)
-    lam_of = cfg.arrival_profile or (lambda t: cfg.arrival_rate_mpps)
-    # Closed form per small step: stable M/D/1-ish; we only need the summary.
-    step = 10.0
-    t = 0.0
-    offered = dropped = serviced = 0
-    backlog = 0.0
-    lat_num = 0.0
-    while t < cfg.duration_us:
-        lam = lam_of(t)
-        n = int(rng.poisson(lam * step))
-        offered += n
-        cap = cfg.service_rate_mpps * step
-        do = min(backlog + n, cap)
-        serviced += int(do)
-        backlog = backlog + n - do
-        if backlog > cfg.queue_capacity:
-            dropped += int(backlog - cfg.queue_capacity)
-            backlog = float(cfg.queue_capacity)
-        lat_num += backlog * step        # area under queue curve (Little)
-        t += step
-    mean_lat = lat_num / max(serviced, 1)
-    return SimResult(
-        vacations_us=np.zeros(1), busies_us=np.asarray([cfg.duration_us]),
-        n_v=np.zeros(1), offered=offered, dropped=dropped, serviced=serviced,
-        busy_tries=0, wakeups=0, cpu_fraction=1.0,
-        mean_latency_us=float(mean_lat + 1.0 / cfg.service_rate_mpps),
-        p99_latency_us=float(mean_lat * 3 + 1.0 / cfg.service_rate_mpps),
-        worst_latency_us=float(cfg.queue_capacity / cfg.service_rate_mpps),
-    )
+    rs = simulate_run(BusyPollPolicy(), cfg.workload(), cfg.run_config())
+    return SimResult.from_run_stats(rs)

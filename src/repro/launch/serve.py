@@ -20,13 +20,8 @@ import numpy as np
 from repro.configs import get_config, list_configs
 from repro.core import MetronomeConfig
 from repro.models import Model
-from repro.serving import (
-    BusyPollServer,
-    EngineConfig,
-    InferenceEngine,
-    MetronomeServer,
-    Request,
-)
+from repro.runtime import BusyPollPolicy, FixedPeriodPolicy, MetronomePolicy
+from repro.serving import EngineConfig, InferenceEngine, Request, Server
 
 
 def main(argv=None) -> int:
@@ -40,8 +35,11 @@ def main(argv=None) -> int:
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--pollers", type=int, default=3)
     ap.add_argument("--v-target-us", type=float, default=3_000.0)
+    ap.add_argument("--policy", default="metronome",
+                    choices=("metronome", "busy-poll", "fixed-period"),
+                    help="retrieval policy (repro.runtime)")
     ap.add_argument("--busy-poll", action="store_true",
-                    help="use the spinning baseline instead of Metronome")
+                    help="deprecated alias for --policy busy-poll")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -57,13 +55,19 @@ def main(argv=None) -> int:
     engine.submit([warm])
     engine.pump()
 
-    if args.busy_poll:
-        server = BusyPollServer(engine)
+    if args.busy_poll and args.policy != "metronome":
+        ap.error("--busy-poll (deprecated) conflicts with an explicit "
+                 "--policy; pass --policy busy-poll instead")
+    mode = "busy-poll" if args.busy_poll else args.policy
+    if mode == "busy-poll":
+        policy = BusyPollPolicy()
+    elif mode == "fixed-period":
+        policy = FixedPeriodPolicy(args.v_target_us, threads=1)
     else:
-        server = MetronomeServer(
-            engine, MetronomeConfig(m=args.pollers,
-                                    v_target_us=args.v_target_us,
-                                    t_long_us=args.v_target_us * 20))
+        policy = MetronomePolicy(
+            MetronomeConfig(m=args.pollers, v_target_us=args.v_target_us,
+                            t_long_us=args.v_target_us * 20))
+    server = Server(engine, policy)
     server.start()
     rng = np.random.default_rng(0)
     reqs = []
@@ -76,11 +80,11 @@ def main(argv=None) -> int:
     ok = all(r.wait(60.0) for r in reqs)
     stats = server.stop()
     ttft = np.median([(r.first_token_ns - r.arrival_ns) / 1e6 for r in reqs])
-    print(f"arch={cfg.name} mode={'busy-poll' if args.busy_poll else 'metronome'} "
+    print(f"arch={cfg.name} mode={mode} "
           f"completed={sum(len(r.tokens) == args.max_new for r in reqs)}/{len(reqs)} "
           f"cpu={stats.cpu_fraction:.3f} ttft_ms={ttft:.2f}")
-    if not args.busy_poll:
-        ctrl = server.controller
+    if mode == "metronome":
+        ctrl = policy.controller
         print(f"controller: rho={ctrl.rho:.3f} T_S={ctrl.t_short_us:.0f}us "
               f"cycles={ctrl.cycles}")
     return 0 if ok else 1

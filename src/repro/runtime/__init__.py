@@ -1,0 +1,70 @@
+"""repro.runtime — pluggable retrieval policies × workloads, sim/real parity.
+
+The paper's contribution, factored into two orthogonal protocols:
+
+  - ``RetrievalPolicy`` (policy.py): when to wake and poll — busy-poll,
+    Metronome (adaptive Eq 10/12), fixed-period, equal-timeouts;
+  - ``Workload`` (workload.py): what arrives — Poisson, CBR, on/off
+    bursty, timestamped trace replay (speedup + jitter).
+
+Two execution backends run *any* policy against *any* workload and
+return one ``RunStats``:
+
+  - ``simulate_run`` (sim.py): aggregate-exact discrete-event simulation;
+  - ``Runtime`` (runtime.py): real OS threads draining real queues.
+
+Adding a retrieval strategy or a traffic scenario is a one-file change:
+implement the protocol, and every backend, benchmark, and the serving
+server can use it.
+"""
+
+from .policy import (
+    BusyPollPolicy,
+    EqualTimeoutsPolicy,
+    FixedPeriodPolicy,
+    MetronomePolicy,
+    RetrievalPolicy,
+    WakeContext,
+)
+from .queues import BoundedQueue
+from .runtime import Runtime
+from .sim import (
+    HR_SLEEP_MODEL,
+    NANOSLEEP_MODEL,
+    PERFECT_SLEEP_MODEL,
+    SimRunConfig,
+    SleepModel,
+    simulate_run,
+)
+from .stats import Reservoir, RunStats
+from .workload import (
+    CBRWorkload,
+    OnOffBurstyWorkload,
+    PoissonWorkload,
+    TraceReplayWorkload,
+    Workload,
+)
+
+__all__ = [
+    "RetrievalPolicy",
+    "WakeContext",
+    "BusyPollPolicy",
+    "MetronomePolicy",
+    "FixedPeriodPolicy",
+    "EqualTimeoutsPolicy",
+    "Workload",
+    "PoissonWorkload",
+    "CBRWorkload",
+    "OnOffBurstyWorkload",
+    "TraceReplayWorkload",
+    "BoundedQueue",
+    "Runtime",
+    "RunStats",
+    "Reservoir",
+    "SleepModel",
+    "HR_SLEEP_MODEL",
+    "NANOSLEEP_MODEL",
+    "PERFECT_SLEEP_MODEL",
+    "SimRunConfig",
+    "simulate_run",
+]

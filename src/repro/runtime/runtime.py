@@ -1,0 +1,209 @@
+"""Real-thread execution backend: any policy × any workload, OS threads.
+
+One generic ``Runtime`` runs ``policy.threads`` OS threads against one or
+more shared bounded queues, executing the paper's Listing-2 loop shape:
+
+    while running:
+        lock_taken = False
+        for q in queues:
+            if not trylock(q):   continue
+            lock_taken = True
+            while work:  process(...)                        # busy period
+            policy.on_cycle_end(busy_us, vacation_us)
+            unlock(q)
+        sleep(policy.on_wake(ctx))          # 0 => spin (busy-poll policy)
+
+What used to be three hand-rolled loops (``MetronomePollers``,
+``BusyPollLoop``, the serving servers) is now this one loop with the
+policy injected; ``repro.core.pollers`` and ``repro.serving.server``
+keep their old names as thin shims over it.
+
+CPU accounting uses per-thread CPU time (time.thread_time_ns around the
+loop body) — the userspace analogue of the paper's getrusage()
+methodology, immune to descheduling on shared hosts.  Spinning policies
+are pinned at a full core in the report (their defining cost, and what
+the paper charges DPDK).
+
+``Runtime.run(workload, ...)`` additionally replays a ``Workload``
+against the queues in real time from a feeder thread, returning the same
+``RunStats`` the simulator produces — the sim/real parity surface.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import warnings
+from typing import Callable
+
+import numpy as np
+
+from repro.core.hr_sleep import hr_sleep
+
+from .policy import WakeContext
+from .queues import BoundedQueue
+from .stats import Reservoir, RunStats
+
+__all__ = ["Runtime"]
+
+
+class Runtime:
+    def __init__(
+        self,
+        queues: list[BoundedQueue],
+        process: Callable[[list], None],
+        policy,
+        *,
+        burst_size: int = 32,
+        sleep_fn: Callable[[int], None] = hr_sleep,
+        latency_sample_every: int = 16,
+        idle_work: Callable[[], bool] | None = None,
+        latency_reservoir: int = 65_536,
+    ):
+        """``process`` consumes a burst of retrieved items; ``idle_work``
+        (optional) is polled during the busy period after each burst and
+        returns whether it still made progress — the hook that lets a
+        serving engine keep its decode loop inside the busy period."""
+        self.queues = queues
+        self.process = process
+        self.policy = policy
+        self.burst_size = burst_size
+        self.sleep_fn = sleep_fn
+        self.idle_work = idle_work
+        self.stats = RunStats(backend="threads",
+                              policy=getattr(policy, "name", ""))
+        self._lat_cap = latency_reservoir
+        self._stats_lock = threading.Lock()
+        self._running = threading.Event()
+        self._threads: list[threading.Thread] = []
+        self._lat_every = max(latency_sample_every, 1)
+
+    # -- lifecycle -------------------------------------------------------------
+    def start(self) -> None:
+        self.policy.reset()
+        # queue/lock counters are cumulative; snapshot so a restarted
+        # Runtime reports only this run's arrivals and busy tries
+        self._base_counts = [(q.offered, q.dropped, q.lock.busy_tries)
+                             for q in self.queues]
+        self.stats = RunStats(backend="threads",
+                              policy=getattr(self.policy, "name", ""),
+                              started_ns=time.monotonic_ns(),
+                              latency_us=Reservoir(self._lat_cap))
+        self._running.set()
+        self._threads = [
+            threading.Thread(target=self._run, name=f"runtime-{i}", daemon=True)
+            for i in range(self.policy.threads)
+        ]
+        for t in self._threads:
+            t.start()
+
+    def stop(self, timeout: float = 5.0) -> RunStats:
+        self._running.clear()
+        for t in self._threads:
+            t.join(timeout)
+        st = self.stats
+        st.stopped_ns = time.monotonic_ns()
+        base = getattr(self, "_base_counts", [(0, 0, 0)] * len(self.queues))
+        st.offered = sum(q.offered - b[0] for q, b in zip(self.queues, base))
+        st.dropped = sum(q.dropped - b[1] for q, b in zip(self.queues, base))
+        st.busy_tries = sum(q.lock.busy_tries - b[2]
+                            for q, b in zip(self.queues, base))
+        if getattr(self.policy, "spin", False):
+            # By construction a spinning policy never sleeps: charge one
+            # full core per thread (the paper's DPDK baseline accounting).
+            st.awake_ns = st.duration_ns * max(self.policy.threads, 1)
+        return st
+
+    # -- the paper's loop, policy-parameterized ----------------------------------
+    def _run(self) -> None:
+        policy = self.policy
+        st = self.stats
+        wake = 0
+        while self._running.is_set():
+            t_wake = time.monotonic_ns()
+            t_cpu0 = time.thread_time_ns()
+            lock_taken = False
+            items = 0
+            for q in self.queues:
+                if not q.lock.try_acquire():
+                    continue
+                lock_taken = True
+                try:
+                    vacation_ns = t_wake - q.last_busy_end_ns
+                    busy_start = time.monotonic_ns()
+                    while True:
+                        burst = q.poll(self.burst_size)
+                        if burst:
+                            items += len(burst)
+                            if wake % self._lat_every == 0:
+                                now = time.monotonic_ns()
+                                sample = [(now - ts) / 1e3
+                                          for ts, _ in burst[:4]]
+                                with self._stats_lock:
+                                    st.latency_us.extend(sample)
+                            self.process([it for _, it in burst])
+                        did = self.idle_work() if self.idle_work else False
+                        if not burst and not did:
+                            break
+                    busy_end = time.monotonic_ns()
+                    q.last_busy_end_ns = busy_end
+                    policy.on_cycle_end((busy_end - busy_start) / 1e3,
+                                        max(vacation_ns / 1e3, 1e-3))
+                finally:
+                    q.lock.release()
+            t_cpu1 = time.thread_time_ns()
+            with self._stats_lock:
+                st.wakeups += 1
+                st.awake_ns += t_cpu1 - t_cpu0
+                st.items += items
+                if lock_taken:
+                    st.cycles += 1
+            wake += 1
+            sleep_ns = policy.on_wake(WakeContext(
+                primary=lock_taken, items=items,
+                # ns since run start, matching the simulator's clock
+                now_ns=time.monotonic_ns() - st.started_ns))
+            if sleep_ns > 0:
+                self.sleep_fn(sleep_ns)
+
+    # -- workload replay ---------------------------------------------------------
+    def run(self, workload, *, duration_us: float,
+            payload: Callable[[int], object] = lambda i: i,
+            seed: int = 0, drain_timeout_s: float = 5.0) -> RunStats:
+        """Replay ``workload`` against the queues in real time, then stop.
+
+        Arrivals are generated by ``workload.iter_arrivals`` and pushed at
+        their scheduled offsets (a software traffic generator on the same
+        host).  Returns the unified ``RunStats`` — directly comparable to
+        ``repro.runtime.sim.simulate_run`` for the same policy/workload.
+        """
+        rng = np.random.default_rng(seed)
+        self.start()
+        t0 = time.monotonic_ns()
+        n = 0
+        max_lag_ns = 0
+        for t_us in workload.iter_arrivals(duration_us, rng):
+            gap_ns = t0 + int(t_us * 1e3) - time.monotonic_ns()
+            if gap_ns > 0:
+                time.sleep(gap_ns / 1e9)
+            else:
+                max_lag_ns = max(max_lag_ns, -gap_ns)
+            self.queues[n % len(self.queues)].push(payload(n))
+            n += 1
+        tail_ns = t0 + int(duration_us * 1e3) - time.monotonic_ns()
+        if tail_ns > 0:
+            time.sleep(tail_ns / 1e9)
+        deadline = time.monotonic() + drain_timeout_s
+        while any(len(q) for q in self.queues) and time.monotonic() < deadline:
+            time.sleep(0.005)
+        st = self.stop()
+        st.workload = getattr(workload, "name", type(workload).__name__)
+        st.feeder_lag_us = max_lag_ns / 1e3
+        if n and max_lag_ns / 1e3 > 0.05 * duration_us:
+            warnings.warn(
+                f"workload generator fell {max_lag_ns / 1e3:.0f}us behind "
+                f"its schedule ({n} arrivals in {duration_us:.0f}us): the "
+                "host cannot source this rate in real time, so the run is "
+                "not comparable to a simulate_run of the same workload",
+                RuntimeWarning, stacklevel=2)
+        return st

@@ -1,0 +1,202 @@
+"""Unified run statistics for every execution backend.
+
+One ``RunStats`` dataclass is produced by the discrete-event simulator,
+the threaded ``Runtime``, and the serving server, so policies and
+workloads can be compared apples-to-apples across backends (and the old
+``PollerStats``/``ServerStats``/``SimResult`` views become thin aliases
+or conversions of this).
+
+``Reservoir`` is a bounded uniform sample: long-running servers record
+latency forever without unbounded memory growth (each of the first
+``capacity`` values is kept; afterwards value *n* replaces a random slot
+with probability capacity/n — the classic Algorithm R invariant, every
+value seen has equal probability of being in the sample).
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["Reservoir", "RunStats"]
+
+
+class Reservoir:
+    """Bounded uniform reservoir sample of a float stream (Algorithm R).
+
+    Quacks enough like a list (len/iter/bool/__array__/extend/append)
+    that existing consumers — ``np.median(stats.latency_samples_us)``,
+    truthiness guards — keep working unchanged.
+    """
+
+    __slots__ = ("capacity", "count", "_buf", "_rng")
+
+    def __init__(self, capacity: int = 65_536, seed: int = 0):
+        if capacity < 1:
+            raise ValueError("Reservoir capacity must be >= 1")
+        self.capacity = capacity
+        self.count = 0              # total values ever offered
+        self._buf: list[float] = []
+        self._rng = random.Random(seed)
+
+    def append(self, value: float) -> None:
+        self.count += 1
+        if len(self._buf) < self.capacity:
+            self._buf.append(float(value))
+            return
+        j = self._rng.randrange(self.count)
+        if j < self.capacity:
+            self._buf[j] = float(value)
+
+    def extend(self, values) -> None:
+        for v in values:
+            self.append(v)
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def __bool__(self) -> bool:
+        return bool(self._buf)
+
+    def __iter__(self):
+        return iter(self._buf)
+
+    def __getitem__(self, i):
+        return self._buf[i]
+
+    def __array__(self, dtype=None, copy=None):
+        return np.asarray(self._buf, dtype=dtype or np.float64)
+
+    def __repr__(self) -> str:
+        return (f"Reservoir(n={len(self._buf)}/{self.capacity}, "
+                f"seen={self.count})")
+
+
+def _empty() -> np.ndarray:
+    return np.empty(0)
+
+
+@dataclass
+class RunStats:
+    """One result type for sim / threads / server runs.
+
+    Time bookkeeping is in nanoseconds (``awake_ns`` over
+    ``stopped_ns - started_ns``) so the real-thread backends can feed
+    ``time.thread_time_ns`` straight in; the simulator converts its
+    microsecond clock once at the end.  Cycle-level arrays
+    (vacations/busies/backlogs, adaptation time series) are only
+    populated by the simulator — real threads would pay too much for
+    them on the hot path.
+    """
+
+    backend: str = ""                 # "sim" | "threads" | "server"
+    policy: str = ""
+    workload: str = ""
+
+    wakeups: int = 0
+    cycles: int = 0                   # busy periods won (lock taken)
+    busy_tries: int = 0               # failed trylocks (backup wakes)
+    items: int = 0                    # packets / requests serviced
+    offered: int = 0
+    dropped: int = 0
+
+    awake_ns: int = 0
+    started_ns: int = 0
+    stopped_ns: int = 0
+
+    latency_us: Reservoir = field(default_factory=Reservoir)
+    # analytic backends (the busy-poll fluid model) report closed-form
+    # latency summaries instead of samples
+    latency_override: dict | None = None
+    # real-time replay only: worst lateness of the arrival generator vs
+    # the workload's schedule.  >> mean inter-arrival gap means the host
+    # could not source the workload and the run is NOT sim-comparable.
+    feeder_lag_us: float = 0.0
+
+    # simulator-only cycle samples and adaptation series
+    vacations_us: np.ndarray = field(default_factory=_empty)
+    busies_us: np.ndarray = field(default_factory=_empty)
+    n_v: np.ndarray = field(default_factory=_empty)
+    rho_series: np.ndarray = field(default_factory=_empty)
+    ts_series: np.ndarray = field(default_factory=_empty)
+    tput_series_mpps: np.ndarray = field(default_factory=_empty)
+    offered_series_mpps: np.ndarray = field(default_factory=_empty)
+    series_t_us: np.ndarray = field(default_factory=_empty)
+
+    # -- derived ---------------------------------------------------------------
+    @property
+    def duration_ns(self) -> int:
+        return max(self.stopped_ns - self.started_ns, 1)
+
+    @property
+    def cpu_fraction(self) -> float:
+        """Sum of thread awake time over wall duration (can exceed 1.0)."""
+        return self.awake_ns / self.duration_ns
+
+    @property
+    def loss_fraction(self) -> float:
+        return self.dropped / max(self.offered, 1)
+
+    @property
+    def serviced(self) -> int:
+        return self.items
+
+    # legacy PollerStats / ServerStats spellings
+    @property
+    def busy_periods(self) -> int:
+        return self.cycles
+
+    @property
+    def latency_samples_us(self) -> Reservoir:
+        return self.latency_us
+
+    @property
+    def retrieval_lat_us(self) -> Reservoir:
+        return self.latency_us
+
+    # latency summaries (empty-safe, like the old SimResult defaults)
+    @property
+    def mean_latency_us(self) -> float:
+        if self.latency_override:
+            return self.latency_override["mean"]
+        return float(np.mean(self.latency_us)) if self.latency_us else 0.0
+
+    @property
+    def p99_latency_us(self) -> float:
+        if self.latency_override:
+            return self.latency_override["p99"]
+        return (float(np.percentile(np.asarray(self.latency_us), 99))
+                if self.latency_us else 0.0)
+
+    @property
+    def worst_latency_us(self) -> float:
+        if self.latency_override:
+            return self.latency_override["worst"]
+        return float(np.max(np.asarray(self.latency_us))) if self.latency_us else 0.0
+
+    @property
+    def mean_vacation_us(self) -> float:
+        return float(np.mean(self.vacations_us)) if self.vacations_us.size else 0.0
+
+    @property
+    def mean_busy_us(self) -> float:
+        return float(np.mean(self.busies_us)) if self.busies_us.size else 0.0
+
+    @property
+    def mean_nv(self) -> float:
+        return float(np.mean(self.n_v)) if self.n_v.size else 0.0
+
+    def summary(self) -> dict:
+        """Flat dict of the headline numbers (benchmark CSV rows, logs)."""
+        return {
+            "backend": self.backend, "policy": self.policy,
+            "workload": self.workload, "wakeups": self.wakeups,
+            "cycles": self.cycles, "busy_tries": self.busy_tries,
+            "serviced": self.items, "offered": self.offered,
+            "dropped": self.dropped, "loss_fraction": self.loss_fraction,
+            "cpu_fraction": self.cpu_fraction,
+            "mean_latency_us": self.mean_latency_us,
+            "p99_latency_us": self.p99_latency_us,
+        }

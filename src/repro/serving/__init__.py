@@ -1,2 +1,7 @@
 from .engine import EngineConfig, InferenceEngine, Request  # noqa: F401
-from .server import BusyPollServer, MetronomeServer, ServerStats  # noqa: F401
+from .server import (  # noqa: F401
+    BusyPollServer,
+    MetronomeServer,
+    Server,
+    ServerStats,
+)

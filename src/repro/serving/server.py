@@ -1,68 +1,66 @@
-"""MetronomeServer — the paper's architecture deployed on the serving path.
+"""Request ingress for the serving engine — the paper's architecture on
+the serving path, expressed through the ``repro.runtime`` API.
 
-The NIC Rx queue becomes the request ingress queue; "packet processing"
-becomes engine.pump() (prefill + decode ticks).  M poller threads execute
-the paper's Listing-2 loop verbatim: race for the queue lock via
-trylock(), the winner drains ingress + runs the engine until idle (busy
-period), losers instantly re-sleep; the adaptive controller (Eqs 10/12)
-sets the primary timeout from the measured busy/vacation ratio so the
-retrieval cadence tracks the offered request rate.
+One ``Server`` composes three pieces instead of hand-rolling a loop:
 
-``BusyPollServer`` is the DPDK-classic baseline (Listing 1): one dedicated
-thread spinning on the queue — same engine, 100% of a core.
+  - a ``BoundedQueue`` as the request ingress (the "NIC Rx ring");
+  - any ``RetrievalPolicy`` deciding the retrieval cadence;
+  - the generic threaded ``Runtime``, whose busy period drains ingress
+    *and* keeps ``engine.pump()`` ticking until the engine goes idle.
 
-Stats mirror the paper's evaluation: CPU fraction (awake-time), busy
-tries, retrieval latency (enqueue -> retrieval), time-to-first-token.
+So the exact policy object you validated in the simulator serves real
+requests unchanged:
+
+    srv = Server(engine, MetronomePolicy(cfg))
+    srv.start(); srv.submit(req); ...; stats = srv.stop()
+
+``MetronomeServer`` / ``BusyPollServer`` are deprecated aliases
+(``Server`` + ``MetronomePolicy`` / ``BusyPollPolicy``); ``ServerStats``
+is the unified ``repro.runtime.RunStats`` under its old name.  Stats
+mirror the paper's evaluation: CPU fraction (awake-time), busy tries,
+retrieval latency (enqueue -> retrieval), time-to-first-token.
 """
 
 from __future__ import annotations
 
-import threading
-import time
-from dataclasses import dataclass, field
+import warnings
 
-from repro.core import (
-    BoundedQueue,
-    MetronomeConfig,
-    MetronomeController,
-    hr_sleep,
-)
+from repro.core.controller import MetronomeConfig
+from repro.core.hr_sleep import hr_sleep
+from repro.runtime.policy import BusyPollPolicy, MetronomePolicy
+from repro.runtime.queues import BoundedQueue
+from repro.runtime.runtime import Runtime
+from repro.runtime.stats import RunStats as ServerStats
+
 from .engine import InferenceEngine, Request
 
-__all__ = ["ServerStats", "MetronomeServer", "BusyPollServer"]
+__all__ = ["ServerStats", "Server", "MetronomeServer", "BusyPollServer"]
+
+_DEFAULT_SERVING_CFG = dict(m=3, v_target_us=2_000.0, t_long_us=50_000.0)
 
 
-@dataclass
-class ServerStats:
-    wakeups: int = 0
-    busy_periods: int = 0
-    busy_tries: int = 0
-    awake_ns: int = 0
-    started_ns: int = 0
-    stopped_ns: int = 0
-    retrieval_lat_us: list = field(default_factory=list)
+class Server:
+    """Serving ingress: ``Runtime`` + policy + engine, one class for every
+    retrieval strategy."""
 
-    @property
-    def cpu_fraction(self) -> float:
-        dur = max(self.stopped_ns - self.started_ns, 1)
-        return self.awake_ns / dur
-
-
-class MetronomeServer:
-    def __init__(self, engine: InferenceEngine,
-                 cfg: MetronomeConfig | None = None,
-                 *, queue_capacity: int = 1024,
-                 sleep_fn=hr_sleep):
+    def __init__(self, engine: InferenceEngine, policy, *,
+                 queue_capacity: int = 1024, sleep_fn=hr_sleep):
         self.engine = engine
-        self.cfg = cfg or MetronomeConfig(
-            m=3, v_target_us=2_000.0, t_long_us=50_000.0)
-        self.controller = MetronomeController(self.cfg)
+        self.policy = policy
         self.queue = BoundedQueue(queue_capacity)
-        self.sleep_fn = sleep_fn
-        self.stats = ServerStats()
-        self._stats_lock = threading.Lock()
-        self._running = threading.Event()
-        self._threads: list[threading.Thread] = []
+        self._runtime = Runtime(
+            [self.queue],
+            process=self._ingest,
+            policy=policy,
+            sleep_fn=sleep_fn,
+            # sample every retrieval: request rates are orders of magnitude
+            # below packet rates, so the reservoir absorbs the cost
+            latency_sample_every=1,
+            idle_work=engine.pump,
+        )
+
+    def _ingest(self, reqs: list) -> None:
+        self.engine.submit(reqs)
 
     # -- producer side ---------------------------------------------------------
     def submit(self, req: Request) -> bool:
@@ -70,99 +68,41 @@ class MetronomeServer:
 
     # -- lifecycle --------------------------------------------------------------
     def start(self) -> None:
-        self.stats = ServerStats(started_ns=time.monotonic_ns())
-        self._running.set()
-        self._threads = [
-            threading.Thread(target=self._run, name=f"metronome-srv-{i}",
-                             daemon=True)
-            for i in range(self.cfg.m)
-        ]
-        for t in self._threads:
-            t.start()
+        self._runtime.start()
+        self.stats.backend = "server"
 
     def stop(self, timeout: float = 10.0) -> ServerStats:
-        self._running.clear()
-        for t in self._threads:
-            t.join(timeout)
-        self.stats.stopped_ns = time.monotonic_ns()
-        self.stats.busy_tries = self.queue.lock.busy_tries
-        return self.stats
+        return self._runtime.stop(timeout)
 
-    # -- the paper's loop (Listing 2), serving edition ----------------------------
-    def _run(self) -> None:
-        ctrl = self.controller
-        st = self.stats
-        while self._running.is_set():
-            t_wake = time.monotonic_ns()
-            t_cpu0 = time.thread_time_ns()
-            lock_taken = False
-            if self.queue.lock.try_acquire():
-                lock_taken = True
-                try:
-                    vacation_us = (t_wake - self.queue.last_busy_end_ns) / 1e3
-                    # busy period: drain ingress + run engine until idle
-                    while True:
-                        burst = self.queue.poll(32)
-                        if burst:
-                            now = time.monotonic_ns()
-                            lat = [(now - ts) / 1e3 for ts, _ in burst[:4]]
-                            with self._stats_lock:
-                                st.retrieval_lat_us.extend(lat)
-                            self.engine.submit([r for _, r in burst])
-                        did = self.engine.pump()
-                        if not burst and not did:
-                            break
-                    t_busy_end = time.monotonic_ns()
-                    self.queue.last_busy_end_ns = t_busy_end
-                    ctrl.on_cycle_end((t_busy_end - t_wake) / 1e3,
-                                      max(vacation_us, 1e-3))
-                finally:
-                    self.queue.lock.release()
-            t_cpu1 = time.thread_time_ns()
-            with self._stats_lock:
-                st.wakeups += 1
-                st.awake_ns += t_cpu1 - t_cpu0
-                if lock_taken:
-                    st.busy_periods += 1
-            self.sleep_fn(ctrl.timeout_ns(primary=lock_taken))
+    @property
+    def stats(self) -> ServerStats:
+        return self._runtime.stats
 
 
-class BusyPollServer:
-    """Baseline: dedicated spinning thread (paper Listing 1 semantics)."""
+class MetronomeServer(Server):
+    """Deprecated alias for ``Server`` + ``MetronomePolicy``."""
+
+    def __init__(self, engine: InferenceEngine,
+                 cfg: MetronomeConfig | None = None,
+                 *, queue_capacity: int = 1024, sleep_fn=hr_sleep):
+        warnings.warn(
+            "MetronomeServer is deprecated; use "
+            "Server(engine, MetronomePolicy(cfg))",
+            DeprecationWarning, stacklevel=2)
+        self.cfg = cfg or MetronomeConfig(**_DEFAULT_SERVING_CFG)
+        policy = MetronomePolicy(self.cfg)
+        super().__init__(engine, policy, queue_capacity=queue_capacity,
+                         sleep_fn=sleep_fn)
+        self.controller = policy.controller
+
+
+class BusyPollServer(Server):
+    """Deprecated alias for ``Server`` + ``BusyPollPolicy`` (paper
+    Listing 1 semantics: one dedicated spinning thread)."""
 
     def __init__(self, engine: InferenceEngine, *, queue_capacity: int = 1024):
-        self.engine = engine
-        self.queue = BoundedQueue(queue_capacity)
-        self.stats = ServerStats()
-        self._running = threading.Event()
-        self._thread: threading.Thread | None = None
-
-    def submit(self, req: Request) -> bool:
-        return self.queue.push(req)
-
-    def start(self) -> None:
-        self.stats = ServerStats(started_ns=time.monotonic_ns())
-        self._running.set()
-        self._thread = threading.Thread(target=self._run, daemon=True,
-                                        name="busypoll-srv")
-        self._thread.start()
-
-    def stop(self, timeout: float = 10.0) -> ServerStats:
-        self._running.clear()
-        if self._thread:
-            self._thread.join(timeout)
-        self.stats.stopped_ns = time.monotonic_ns()
-        self.stats.awake_ns = self.stats.stopped_ns - self.stats.started_ns
-        return self.stats
-
-    def _run(self) -> None:
-        st = self.stats
-        while self._running.is_set():
-            st.wakeups += 1
-            burst = self.queue.poll(32)
-            if burst:
-                now = time.monotonic_ns()
-                st.retrieval_lat_us.extend((now - ts) / 1e3
-                                           for ts, _ in burst[:4])
-                self.engine.submit([r for _, r in burst])
-            self.engine.pump()
+        warnings.warn(
+            "BusyPollServer is deprecated; use "
+            "Server(engine, BusyPollPolicy())",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(engine, BusyPollPolicy(), queue_capacity=queue_capacity)

@@ -86,5 +86,7 @@ def train_loop(cfg, *, steps: int, ckpt_dir: str, seed: int = 0,
                           extra={"loss": loss})
     finally:
         prefetch.stop()
-    ckpt.wait()
+        # Drain the pending async save even on a crash/preemption exit, or
+        # the restart resumes from an older checkpoint than was scheduled.
+        ckpt.wait()
     return {"losses": losses, "final_step": steps, "resumed_from": resumed_from}

@@ -1,0 +1,351 @@
+"""Tests for the unified repro.runtime API: policy/workload protocols,
+sim/real parity, trace-replay math, bounded stats, deprecation shims."""
+
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import MetronomeConfig
+from repro.runtime import (
+    BoundedQueue,
+    BusyPollPolicy,
+    CBRWorkload,
+    EqualTimeoutsPolicy,
+    FixedPeriodPolicy,
+    MetronomePolicy,
+    OnOffBurstyWorkload,
+    PoissonWorkload,
+    Reservoir,
+    RetrievalPolicy,
+    Runtime,
+    SimRunConfig,
+    TraceReplayWorkload,
+    Workload,
+    simulate_run,
+)
+from repro.core.hr_sleep import naive_sleep
+
+
+# ---------------------------------------------------------------------------
+# protocols
+# ---------------------------------------------------------------------------
+
+def test_policies_and_workloads_satisfy_protocols():
+    policies = [BusyPollPolicy(), MetronomePolicy(),
+                FixedPeriodPolicy(50.0), EqualTimeoutsPolicy()]
+    workloads = [PoissonWorkload(1.0), CBRWorkload(1.0),
+                 OnOffBurstyWorkload(4.0),
+                 TraceReplayWorkload([0.0, 1.0, 2.0])]
+    for p in policies:
+        assert isinstance(p, RetrievalPolicy), p
+    for w in workloads:
+        assert isinstance(w, Workload), w
+
+
+def test_every_policy_runs_against_every_workload_in_sim():
+    """The acceptance grid: 4 policies x 4 workloads, one engine."""
+    trace = np.cumsum(np.full(50_000, 0.5))          # 2 Mpps CBR-ish trace
+    mk_workloads = [
+        lambda: PoissonWorkload(2.0),
+        lambda: CBRWorkload(2.0),
+        lambda: OnOffBurstyWorkload(8.0, on_mean_us=2_000.0,
+                                    off_mean_us=6_000.0),
+        lambda: TraceReplayWorkload(trace, speedup=2.0, jitter=0.1, loop=True),
+    ]
+    mk_policies = [
+        lambda: BusyPollPolicy(),
+        lambda: MetronomePolicy(MetronomeConfig(m=3)),
+        lambda: FixedPeriodPolicy(50.0),
+        lambda: EqualTimeoutsPolicy(MetronomeConfig(m=3, v_target_us=10.0)),
+    ]
+    for mw in mk_workloads:
+        for mp in mk_policies:
+            p, w = mp(), mw()
+            rs = simulate_run(p, w, SimRunConfig(duration_us=20_000.0, seed=1))
+            assert rs.serviced > 0, (p, w)
+            assert rs.offered >= rs.serviced
+            assert 0.0 < rs.cpu_fraction <= max(p.threads, 1) + 0.1
+            if getattr(p, "spin", False):
+                assert rs.cpu_fraction == pytest.approx(1.0)
+
+
+def test_policy_instance_reusable_across_backends():
+    """The same policy object runs in the simulator, then on real threads."""
+    policy = MetronomePolicy(MetronomeConfig(m=2, v_target_us=500.0,
+                                             t_long_us=5_000.0))
+    rs_sim = simulate_run(policy, PoissonWorkload(1.0),
+                          SimRunConfig(duration_us=50_000.0, seed=2))
+    assert rs_sim.serviced > 0
+
+    q = BoundedQueue(4096)
+    seen = []
+    rt = Runtime([q], process=seen.extend, policy=policy)
+    rt.start()
+    for i in range(50):
+        q.push(i)
+        time.sleep(0.001)
+    time.sleep(0.05)
+    rs_real = rt.stop()
+    assert sorted(seen) == list(range(50))
+    assert rs_real.items == 50
+    assert rs_real.cpu_fraction < 1.0
+
+
+# ---------------------------------------------------------------------------
+# sim/real parity
+# ---------------------------------------------------------------------------
+
+def _spin_us(us: float) -> None:
+    end = time.perf_counter_ns() + int(us * 1_000)
+    while time.perf_counter_ns() < end:
+        pass
+
+
+def _parity_pair(rate_per_us: float, service_us: float, duration_us: float,
+                 seed: int = 3):
+    """Run the same policy config under the same Poisson workload in the
+    simulator and on real threads; return (sim_stats, real_stats, policies)."""
+    def mk_policy():
+        return MetronomePolicy(MetronomeConfig(m=2, v_target_us=1_000.0,
+                                               t_long_us=20_000.0))
+
+    p_sim = mk_policy()
+    rs_sim = simulate_run(
+        p_sim, PoissonWorkload(rate_per_us),
+        SimRunConfig(duration_us=duration_us,
+                     service_rate_mpps=1.0 / service_us, seed=seed))
+
+    p_real = mk_policy()
+
+    def process(items):
+        for _ in items:
+            _spin_us(service_us)
+
+    rt = Runtime([BoundedQueue(65_536)], process=process, policy=p_real,
+                 sleep_fn=naive_sleep)
+    rs_real = rt.run(PoissonWorkload(rate_per_us), duration_us=duration_us,
+                     seed=seed)
+    return rs_sim, rs_real, p_sim, p_real
+
+
+@pytest.mark.slow
+def test_sim_real_parity_metronome_poisson():
+    """The same MetronomePolicy configuration converges to similar rho /
+    T_S and the same CPU-fraction trend in the discrete-event simulator
+    and on real threads (loose bands: the real backend rides a noisy
+    shared host)."""
+    lo = _parity_pair(rate_per_us=0.001, service_us=100.0,
+                      duration_us=1_200_000.0)
+    hi = _parity_pair(rate_per_us=0.004, service_us=100.0,
+                      duration_us=1_200_000.0)
+
+    for rs_sim, rs_real, p_sim, p_real in (lo, hi):
+        assert rs_real.items > 0 and rs_sim.items > 0
+        # rho estimates land in the same band (true rho: 0.1 / 0.4)
+        assert abs(p_sim.rho - p_real.rho) < 0.25, (p_sim.rho, p_real.rho)
+        # adaptive T_S within a small factor of each other
+        ratio = p_sim.t_short_us / p_real.t_short_us
+        assert 0.4 < ratio < 2.5, (p_sim.t_short_us, p_real.t_short_us)
+        # both backends sleep most of the time at these loads
+        assert rs_sim.cpu_fraction < 0.9
+        assert rs_real.cpu_fraction < 0.9
+
+    # trend parity: 4x the load raises rho in both backends.  The real
+    # backend's EWMA rides empty-win cycles (a second primary waking just
+    # after a busy period drags B/(B+V) toward 0), so its margin is looser.
+    assert hi[2].rho > lo[2].rho + 0.1          # sim
+    assert hi[3].rho > lo[3].rho + 0.04         # real
+    # and raises CPU in both backends
+    assert hi[0].cpu_fraction > lo[0].cpu_fraction
+    assert hi[1].cpu_fraction > lo[1].cpu_fraction
+
+
+# ---------------------------------------------------------------------------
+# trace replay math
+# ---------------------------------------------------------------------------
+
+def test_trace_replay_speedup_exact_without_jitter():
+    ts = [100.0, 300.0, 500.0, 900.0]
+    wl = TraceReplayWorkload(ts, speedup=2.0, jitter=0.0)
+    wl.reset(np.random.default_rng(0))
+    np.testing.assert_allclose(wl._times, [0.0, 100.0, 200.0, 400.0])
+    assert wl.counts_in(0.0, 150.0) == 2          # arrivals at 0 and 100
+    assert wl.counts_in(150.0, 400.0) == 1        # arrival at 200 ([t0, t1))
+    assert wl.counts_in(400.0, 1e9) == 1          # arrival at 400
+    # mean rate scales with speedup: 4 pkts over (900-100)/2 us
+    assert wl.mean_rate_mpps == pytest.approx(4 / 400.0)
+
+
+def test_trace_replay_jitter_bounds_and_determinism():
+    ts = np.cumsum(np.full(2_000, 10.0))
+    wl = TraceReplayWorkload(ts, speedup=1.0, jitter=0.25)
+    wl.reset(np.random.default_rng(7))
+    gaps = np.diff(wl._times)
+    assert gaps.min() >= 10.0 * 0.75 - 1e-9
+    assert gaps.max() <= 10.0 * 1.25 + 1e-9
+    assert gaps.std() > 0.1                        # jitter actually applied
+    # unbiased in expectation
+    assert np.mean(gaps) == pytest.approx(10.0, rel=0.05)
+    # same seed -> same replay; different seed -> different replay
+    wl2 = TraceReplayWorkload(ts, speedup=1.0, jitter=0.25)
+    wl2.reset(np.random.default_rng(7))
+    np.testing.assert_array_equal(wl._times, wl2._times)
+    wl3 = TraceReplayWorkload(ts, speedup=1.0, jitter=0.25)
+    wl3.reset(np.random.default_rng(8))
+    assert not np.array_equal(wl._times, wl3._times)
+
+
+def test_trace_replay_loop_extends_monotonically():
+    wl = TraceReplayWorkload([0.0, 10.0, 20.0], jitter=0.0, loop=True)
+    wl.reset(np.random.default_rng(0))
+    n = wl.counts_in(0.0, 200.0)
+    assert n > 3                                   # looped past one lap
+    assert np.all(np.diff(wl._times) >= 0)
+    arr = list(wl.iter_arrivals(95.0, np.random.default_rng(0)))
+    assert arr == sorted(arr)
+    assert all(t < 95.0 for t in arr)
+
+
+def test_trace_replay_validation():
+    with pytest.raises(ValueError):
+        TraceReplayWorkload([])
+    with pytest.raises(ValueError):
+        TraceReplayWorkload([1.0], speedup=0.0)
+    with pytest.raises(ValueError):
+        TraceReplayWorkload([1.0], jitter=1.5)
+
+
+# ---------------------------------------------------------------------------
+# workload accounting
+# ---------------------------------------------------------------------------
+
+def test_cbr_counts_are_deterministic_and_exact():
+    wl = CBRWorkload(0.5)                          # one packet every 2us
+    wl.reset(np.random.default_rng(0))
+    total = sum(wl.counts_in(t, t + 7.0) for t in np.arange(0.0, 700.0, 7.0))
+    assert total == 350
+    assert wl.counts_in(10.0, 10.0) == 0
+
+
+def test_onoff_counts_match_duty_cycle():
+    wl = OnOffBurstyWorkload(10.0, on_mean_us=1_000.0, off_mean_us=3_000.0)
+    wl.reset(np.random.default_rng(11))
+    dur = 2_000_000.0
+    total = sum(wl.counts_in(t, t + 50.0) for t in np.arange(0.0, dur, 50.0))
+    expected = 10.0 * wl.duty_cycle * dur
+    assert total == pytest.approx(expected, rel=0.2)
+
+
+# ---------------------------------------------------------------------------
+# bounded stats
+# ---------------------------------------------------------------------------
+
+def test_reservoir_is_bounded_and_uniform_ish():
+    r = Reservoir(capacity=1_000, seed=0)
+    r.extend(float(i) for i in range(100_000))
+    assert len(r) == 1_000
+    assert r.count == 100_000
+    med = float(np.median(r))
+    assert 30_000 < med < 70_000                   # uniform sample, not a head
+    assert np.median(np.asarray(r)) == med         # numpy interop
+
+
+def test_runtime_restart_does_not_double_count():
+    """Queue/lock counters are cumulative; a restarted Runtime must report
+    only its own run's arrivals."""
+    q = BoundedQueue(4096)
+    rt = Runtime([q], process=lambda b: None,
+                 policy=FixedPeriodPolicy(200.0, threads=1))
+    for _ in range(2):
+        rt.start()
+        for i in range(100):
+            q.push(i)
+        deadline = time.monotonic() + 5.0
+        while len(q) and time.monotonic() < deadline:
+            time.sleep(0.005)
+        st = rt.stop()
+        assert st.offered == 100
+        assert st.items == 100
+        assert st.dropped == 0
+
+
+def test_runtime_latency_samples_bounded():
+    q = BoundedQueue(100_000)
+    rt = Runtime([q], process=lambda b: None,
+                 policy=FixedPeriodPolicy(200.0, threads=1),
+                 latency_sample_every=1, latency_reservoir=256)
+    rt.start()
+    for i in range(3_000):
+        q.push(i)
+    deadline = time.monotonic() + 5.0
+    while len(q) and time.monotonic() < deadline:
+        time.sleep(0.01)
+    st = rt.stop()
+    assert st.items == 3_000
+    assert len(st.latency_samples_us) <= 256       # capped despite the flood
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_core_shims_still_resolve_and_warn():
+    from repro.core import (
+        BoundedQueue as BQ,
+        BusyPollLoop,
+        MetronomePollers,
+        PollerStats,
+        SimConfig,
+        simulate,
+    )
+    from repro.runtime import RunStats
+
+    assert BQ is BoundedQueue
+    assert PollerStats is RunStats
+
+    with pytest.warns(DeprecationWarning):
+        mp = MetronomePollers([BoundedQueue(16)], process=lambda b: None)
+    assert isinstance(mp, Runtime)
+    assert mp.controller is mp.policy.controller
+    with pytest.warns(DeprecationWarning):
+        bp = BusyPollLoop([BoundedQueue(16)], process=lambda b: None)
+    assert isinstance(bp.policy, BusyPollPolicy)
+
+    res = simulate(SimConfig(duration_us=20_000.0, seed=5))
+    assert res.serviced > 0
+
+
+def test_serving_shims_still_resolve_and_warn():
+    from repro.serving import BusyPollServer, MetronomeServer, Server, ServerStats
+    from repro.runtime import RunStats
+
+    assert ServerStats is RunStats
+    assert issubclass(MetronomeServer, Server)
+    assert issubclass(BusyPollServer, Server)
+
+    class _NullEngine:
+        def submit(self, reqs):
+            pass
+
+        def pump(self):
+            return False
+
+    with pytest.warns(DeprecationWarning):
+        srv = MetronomeServer(_NullEngine())
+    assert isinstance(srv.policy, MetronomePolicy)
+    assert srv.controller is srv.policy.controller
+    with pytest.warns(DeprecationWarning):
+        bsrv = BusyPollServer(_NullEngine())
+    assert isinstance(bsrv.policy, BusyPollPolicy)
+
+
+def test_old_import_surface_unchanged():
+    """Everything the old repro.core exported still imports cleanly."""
+    import repro.core as core
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        for name in core.__all__:
+            assert getattr(core, name) is not None, name

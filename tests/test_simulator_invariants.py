@@ -4,6 +4,8 @@ keep its accounting self-consistent (spec: property tests on the system's
 invariants)."""
 
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis", reason="hypothesis not installed in this environment")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

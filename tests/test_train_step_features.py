@@ -6,6 +6,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis", reason="hypothesis not installed in this environment")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
