@@ -19,6 +19,7 @@ def main() -> None:
 
     from benchmarks.kernels_bench import kernels
     from benchmarks.policy_matrix import matrix_policies_workloads
+    from benchmarks.rss_skew import matrix_rss_skew
     from benchmarks.paper_tables import (
         fig2_sleep_cpu,
         fig5_vacation_pdf,
@@ -37,7 +38,8 @@ def main() -> None:
         table1_sleep_precision, fig2_sleep_cpu, fig5_vacation_pdf,
         table2_vbar_tuning, fig7_tl_sweep, fig8_m_sweep,
         table3_nanosleep_loss, fig11_adaptation, fig12_dpdk_compare,
-        matrix_policies_workloads, fig15_applications, kernels, roofline,
+        matrix_policies_workloads, matrix_rss_skew,
+        fig15_applications, kernels, roofline,
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -50,8 +50,9 @@ def main():
                      opt_cfg=OptConfig(lr=1e-3,
                                        moment_dtype=cfg.moment_dtype))
     first, last = res["losses"][0], res["losses"][-1]
-    print(f"loss {first:.4f} -> {last:.4f} "
-          f"({'resumed from ' + str(res['resumed_from']) if res['resumed_from'] >= 0 else 'fresh run'})")
+    origin = ("resumed from " + str(res["resumed_from"])
+              if res["resumed_from"] >= 0 else "fresh run")
+    print(f"loss {first:.4f} -> {last:.4f} ({origin})")
     assert last < first, "loss did not improve"
 
 

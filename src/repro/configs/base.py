@@ -9,7 +9,7 @@ never allocated).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 __all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "register", "get_config", "list_configs"]
 

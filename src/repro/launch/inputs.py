@@ -20,7 +20,6 @@ from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, get_config
 from repro.models import Model
 from repro.sharding.logical import logical_axis_rules
 from repro.sharding.policy import (
-    batch_pspec,
     cache_shardings,
     logical_rules,
     param_shardings,

@@ -22,7 +22,6 @@ assignment: ``prefix_embeds`` / ``enc_frames`` arrive precomputed.
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 
 import jax

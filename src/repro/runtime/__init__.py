@@ -13,11 +13,32 @@ return one ``RunStats``:
   - ``simulate_run`` (sim.py): aggregate-exact discrete-event simulation;
   - ``Runtime`` (runtime.py): real OS threads draining real queues.
 
+Multi-queue (RSS) ingress is first-class: a ``Dispatcher``
+(dispatch.py) splits arrivals across N queues — uniform round-robin,
+Zipf flow-hash skew, or idealized least-loaded — and an ``Assignment``
+(assignment.py) maps poller threads to queues — shared sweep, dedicated
+per-queue poller sets, or work stealing.  ``RunStats.per_queue`` breaks
+every counter down by queue.
+
 Adding a retrieval strategy or a traffic scenario is a one-file change:
 implement the protocol, and every backend, benchmark, and the serving
 server can use it.
 """
 
+from .assignment import (
+    Assignment,
+    DedicatedAssignment,
+    SharedAssignment,
+    StealingAssignment,
+    ThreadSlot,
+    clone_policy,
+)
+from .dispatch import (
+    Dispatcher,
+    FlowHashDispatch,
+    LeastLoadedDispatch,
+    RoundRobinDispatch,
+)
 from .policy import (
     BusyPollPolicy,
     EqualTimeoutsPolicy,
@@ -36,7 +57,7 @@ from .sim import (
     SleepModel,
     simulate_run,
 )
-from .stats import Reservoir, RunStats
+from .stats import QueueStats, Reservoir, RunStats
 from .workload import (
     CBRWorkload,
     OnOffBurstyWorkload,
@@ -57,9 +78,20 @@ __all__ = [
     "CBRWorkload",
     "OnOffBurstyWorkload",
     "TraceReplayWorkload",
+    "Dispatcher",
+    "RoundRobinDispatch",
+    "FlowHashDispatch",
+    "LeastLoadedDispatch",
+    "Assignment",
+    "ThreadSlot",
+    "SharedAssignment",
+    "DedicatedAssignment",
+    "StealingAssignment",
+    "clone_policy",
     "BoundedQueue",
     "Runtime",
     "RunStats",
+    "QueueStats",
     "Reservoir",
     "SleepModel",
     "HR_SLEEP_MODEL",

@@ -1,0 +1,180 @@
+"""Ingress dispatchers — *which queue* an arrival lands in.
+
+A multi-queue NIC spreads flows across N Rx rings with an RSS hash; the
+spread is rarely uniform (a handful of elephant flows pin whole rings).
+A ``Dispatcher`` models that placement step for every backend:
+
+  - the discrete-event simulator calls ``split(n, backlogs)`` to divide
+    an aggregate arrival count across queues (aggregate-exact, like the
+    workload itself);
+  - the threaded ``Runtime`` / serving ``Server`` call
+    ``pick(seq, backlogs, key=...)`` per arrival.
+
+``reset(n_queues, rng)`` re-arms internal state before each run; the
+``rng`` is the run's generator, so a dispatch pattern is reproducible
+per seed.
+
+Implementations:
+  - ``RoundRobinDispatch``  uniform spread; with one queue it degenerates
+    to "everything in the queue" and consumes no randomness, so single-
+    queue runs reproduce the pre-multi-queue event sequence exactly;
+  - ``FlowHashDispatch``    RSS emulation: flows with Zipf popularity are
+    hashed to queues, so per-queue load inherits the skew of wherever
+    the elephant flows land (``key=`` gives stable request affinity);
+  - ``LeastLoadedDispatch`` idealized load balancer: arrivals water-fill
+    the shortest backlogs (the upper bound NIC hashing can't reach).
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+__all__ = [
+    "Dispatcher",
+    "RoundRobinDispatch",
+    "FlowHashDispatch",
+    "LeastLoadedDispatch",
+]
+
+
+@runtime_checkable
+class Dispatcher(Protocol):
+    name: str
+
+    def reset(self, n_queues: int, rng: np.random.Generator) -> None: ...
+
+    def split(self, n: int, backlogs: np.ndarray) -> np.ndarray: ...
+
+    def pick(self, seq: int, backlogs, key=None) -> int: ...
+
+
+def _stable_hash(key) -> int:
+    """Process-independent hash (``hash(str)`` is salted per process)."""
+    return zlib.crc32(repr(key).encode())
+
+
+class RoundRobinDispatch:
+    """Uniform spread: arrival ``seq`` goes to queue ``seq % N``; aggregate
+    counts are divided as evenly as possible with a rotating remainder
+    cursor so no queue is systematically favored."""
+
+    name = "round-robin"
+
+    def __init__(self):
+        self._n = 1
+        self._cursor = 0
+
+    def reset(self, n_queues: int, rng: np.random.Generator) -> None:
+        self._n = int(n_queues)
+        self._cursor = 0
+
+    def split(self, n: int, backlogs: np.ndarray) -> np.ndarray:
+        out = np.full(self._n, n // self._n, dtype=np.int64)
+        extra = n % self._n
+        if extra:
+            idx = (self._cursor + np.arange(extra)) % self._n
+            out[idx] += 1
+            self._cursor = (self._cursor + extra) % self._n
+        return out
+
+    def pick(self, seq: int, backlogs, key=None) -> int:
+        return seq % self._n
+
+
+class FlowHashDispatch:
+    """RSS emulation: ``n_flows`` flows with Zipf(``zipf_s``) popularity,
+    each flow hashed to one queue at ``reset`` time.  Per-queue load is
+    the sum of its flows' popularity — skewed exactly the way a real RSS
+    indirection table is when elephant flows land together.
+
+    ``pick(..., key=k)`` maps ``k`` through the same flow table, so equal
+    keys always reach the same queue (request/flow affinity); without a
+    key a flow is drawn from the popularity distribution.
+    """
+
+    name = "flow-hash"
+
+    def __init__(self, n_flows: int = 256, zipf_s: float = 1.2):
+        if n_flows < 1:
+            raise ValueError("n_flows must be >= 1")
+        if zipf_s <= 0:
+            raise ValueError("zipf_s must be > 0")
+        self.n_flows = int(n_flows)
+        self.zipf_s = float(zipf_s)
+        self._n = 1
+        self._flow_queue = np.zeros(self.n_flows, dtype=np.int64)
+        self._flow_probs = np.full(self.n_flows, 1.0 / self.n_flows)
+        self._queue_weights = np.ones(1)
+        self._cum_probs = np.cumsum(self._flow_probs)
+        self._rng: np.random.Generator | None = None
+
+    @property
+    def queue_weights(self) -> np.ndarray:
+        """Fraction of offered load each queue receives (diagnostics)."""
+        return self._queue_weights.copy()
+
+    def reset(self, n_queues: int, rng: np.random.Generator) -> None:
+        self._n = int(n_queues)
+        self._rng = rng
+        w = 1.0 / np.arange(1, self.n_flows + 1, dtype=np.float64) ** self.zipf_s
+        self._flow_probs = w / w.sum()
+        self._cum_probs = np.cumsum(self._flow_probs)
+        # random flow->queue placement: the skew comes from *where* the
+        # heavy flows land, exactly like a hardware indirection table
+        self._flow_queue = rng.integers(0, self._n, size=self.n_flows)
+        self._queue_weights = np.bincount(
+            self._flow_queue, weights=self._flow_probs, minlength=self._n)
+
+    def split(self, n: int, backlogs: np.ndarray) -> np.ndarray:
+        if n <= 0:
+            return np.zeros(self._n, dtype=np.int64)
+        return self._rng.multinomial(int(n), self._queue_weights)
+
+    def pick(self, seq: int, backlogs, key=None) -> int:
+        if key is not None:
+            flow = _stable_hash(key) % self.n_flows
+        else:
+            flow = int(np.searchsorted(self._cum_probs, self._rng.random()))
+            flow = min(flow, self.n_flows - 1)
+        return int(self._flow_queue[flow])
+
+
+class LeastLoadedDispatch:
+    """Idealized balancer: each arrival joins the shortest backlog;
+    aggregate counts water-fill queues toward a common level.  The
+    upper bound on what queue-aware placement can achieve (real RSS
+    cannot see backlogs)."""
+
+    name = "least-loaded"
+
+    def __init__(self):
+        self._n = 1
+
+    def reset(self, n_queues: int, rng: np.random.Generator) -> None:
+        self._n = int(n_queues)
+
+    def split(self, n: int, backlogs: np.ndarray) -> np.ndarray:
+        if n <= 0:
+            return np.zeros(self._n, dtype=np.int64)
+        b = np.asarray(backlogs, dtype=np.float64)
+        # water level L with sum(max(L - b, 0)) = n, found over sorted b
+        s = np.sort(b)
+        for k in range(1, self._n + 1):
+            level = (n + s[:k].sum()) / k
+            if k == self._n or level <= s[k]:
+                break
+        fill = np.maximum(level - b, 0.0)
+        alloc = np.floor(fill).astype(np.int64)
+        short = int(n - alloc.sum())
+        if short > 0:
+            # hand the integer remainder to the least-loaded-after-fill
+            after = b + alloc
+            idx = np.argsort(after, kind="stable")[:short]
+            alloc[idx] += 1
+        return alloc
+
+    def pick(self, seq: int, backlogs, key=None) -> int:
+        return int(np.argmin(np.asarray(backlogs)))

@@ -19,13 +19,15 @@ class BoundedQueue:
     TryLock, so a plain deque suffices (append is GIL-atomic for pushers).
     """
 
-    __slots__ = ("_q", "capacity", "dropped", "offered", "lock", "last_busy_end_ns")
+    __slots__ = ("_q", "capacity", "dropped", "offered", "serviced", "lock",
+                 "last_busy_end_ns")
 
     def __init__(self, capacity: int = 1024):
         self._q: collections.deque = collections.deque()
         self.capacity = capacity
         self.dropped = 0
         self.offered = 0
+        self.serviced = 0
         self.lock = TryLock()
         self.last_busy_end_ns = time.monotonic_ns()
 
@@ -45,6 +47,7 @@ class BoundedQueue:
                 out.append(q.popleft())
             except IndexError:  # racing pushers can't cause this; be safe
                 break
+        self.serviced += len(out)
         return out
 
     def __len__(self) -> int:

@@ -1,17 +1,23 @@
 """Real-thread execution backend: any policy × any workload, OS threads.
 
-One generic ``Runtime`` runs ``policy.threads`` OS threads against one or
-more shared bounded queues, executing the paper's Listing-2 loop shape:
+One generic ``Runtime`` runs poller threads against one or more shared
+bounded queues, executing the paper's Listing-2 loop shape:
 
     while running:
         lock_taken = False
-        for q in queues:
+        for q in my_queues:                  # from the Assignment
             if not trylock(q):   continue
             lock_taken = True
             while work:  process(...)                        # busy period
             policy.on_cycle_end(busy_us, vacation_us)
             unlock(q)
         sleep(policy.on_wake(ctx))          # 0 => spin (busy-poll policy)
+
+Which queues a thread sweeps — and whether each queue gets its own
+policy clone — is decided by an ``Assignment``
+(``repro.runtime.assignment``): ``shared`` (default, all threads sweep
+all queues), ``dedicated`` (one poller set + controller per queue), or
+``stealing`` (home queue first, then the longest backlog).
 
 What used to be three hand-rolled loops (``MetronomePollers``,
 ``BusyPollLoop``, the serving servers) is now this one loop with the
@@ -40,9 +46,11 @@ import numpy as np
 
 from repro.core.hr_sleep import hr_sleep
 
+from .assignment import SharedAssignment, ThreadSlot
+from .dispatch import RoundRobinDispatch
 from .policy import WakeContext
 from .queues import BoundedQueue
-from .stats import Reservoir, RunStats
+from .stats import QueueStats, Reservoir, RunStats
 
 __all__ = ["Runtime"]
 
@@ -59,14 +67,18 @@ class Runtime:
         latency_sample_every: int = 16,
         idle_work: Callable[[], bool] | None = None,
         latency_reservoir: int = 65_536,
+        assignment=None,
     ):
         """``process`` consumes a burst of retrieved items; ``idle_work``
         (optional) is polled during the busy period after each burst and
         returns whether it still made progress — the hook that lets a
-        serving engine keep its decode loop inside the busy period."""
+        serving engine keep its decode loop inside the busy period.
+        ``assignment`` maps threads to queues (default: every thread
+        sweeps every queue, the paper's shared-queue shape)."""
         self.queues = queues
         self.process = process
         self.policy = policy
+        self.assignment = assignment or SharedAssignment()
         self.burst_size = burst_size
         self.sleep_fn = sleep_fn
         self.idle_work = idle_work
@@ -76,23 +88,39 @@ class Runtime:
         self._stats_lock = threading.Lock()
         self._running = threading.Event()
         self._threads: list[threading.Thread] = []
+        self._cycles_q = [0] * len(queues)
         self._lat_every = max(latency_sample_every, 1)
 
     # -- lifecycle -------------------------------------------------------------
     def start(self) -> None:
-        self.policy.reset()
+        self._slots = self.assignment.slots(self.policy, len(self.queues))
+        # reset each distinct policy once (shared slots alias one object;
+        # dedicated slots carry per-queue clones)
+        seen: set[int] = set()
+        for s in self._slots:
+            if id(s.policy) not in seen:
+                seen.add(id(s.policy))
+                s.policy.reset()
         # queue/lock counters are cumulative; snapshot so a restarted
         # Runtime reports only this run's arrivals and busy tries
-        self._base_counts = [(q.offered, q.dropped, q.lock.busy_tries)
-                             for q in self.queues]
+        self._base_counts = [(q.offered, q.dropped, q.lock.busy_tries,
+                              q.serviced) for q in self.queues]
+        self._cycles_q = [0] * len(self.queues)
+        now = time.monotonic_ns()
+        for q in self.queues:
+            # re-arm the vacation clock: it is stamped at queue
+            # construction, and a Runtime started later would otherwise
+            # report a bogus multi-second first vacation to the policy
+            q.last_busy_end_ns = now
         self.stats = RunStats(backend="threads",
                               policy=getattr(self.policy, "name", ""),
-                              started_ns=time.monotonic_ns(),
+                              started_ns=now,
                               latency_us=Reservoir(self._lat_cap))
         self._running.set()
         self._threads = [
-            threading.Thread(target=self._run, name=f"runtime-{i}", daemon=True)
-            for i in range(self.policy.threads)
+            threading.Thread(target=self._run, args=(slot,),
+                             name=f"runtime-{i}", daemon=True)
+            for i, slot in enumerate(self._slots)
         ]
         for t in self._threads:
             t.start()
@@ -103,54 +131,87 @@ class Runtime:
             t.join(timeout)
         st = self.stats
         st.stopped_ns = time.monotonic_ns()
-        base = getattr(self, "_base_counts", [(0, 0, 0)] * len(self.queues))
-        st.offered = sum(q.offered - b[0] for q, b in zip(self.queues, base))
-        st.dropped = sum(q.dropped - b[1] for q, b in zip(self.queues, base))
-        st.busy_tries = sum(q.lock.busy_tries - b[2]
-                            for q, b in zip(self.queues, base))
+        base = getattr(self, "_base_counts",
+                       [(0, 0, 0, 0)] * len(self.queues))
+        cycles_q = getattr(self, "_cycles_q", [0] * len(self.queues))
+        st.per_queue = [
+            QueueStats(queue=i,
+                       offered=q.offered - b[0],
+                       dropped=q.dropped - b[1],
+                       busy_tries=q.lock.busy_tries - b[2],
+                       serviced=q.serviced - b[3],
+                       cycles=cycles_q[i])
+            for i, (q, b) in enumerate(zip(self.queues, base))
+        ]
+        st.offered = sum(pq.offered for pq in st.per_queue)
+        st.dropped = sum(pq.dropped for pq in st.per_queue)
+        st.busy_tries = sum(pq.busy_tries for pq in st.per_queue)
         if getattr(self.policy, "spin", False):
             # By construction a spinning policy never sleeps: charge one
             # full core per thread (the paper's DPDK baseline accounting).
-            st.awake_ns = st.duration_ns * max(self.policy.threads, 1)
+            st.awake_ns = st.duration_ns * max(len(self._threads), 1)
         return st
 
     # -- the paper's loop, policy-parameterized ----------------------------------
-    def _run(self) -> None:
-        policy = self.policy
+    def _run(self, slot: ThreadSlot | None = None) -> None:
+        if slot is None:        # direct callers (tests/shims) get default
+            slot = ThreadSlot(self.policy, tuple(range(len(self.queues))))
+        policy = slot.policy
         st = self.stats
         wake = 0
         while self._running.is_set():
-            t_wake = time.monotonic_ns()
             t_cpu0 = time.thread_time_ns()
             lock_taken = False
             items = 0
-            for q in self.queues:
-                if not q.lock.try_acquire():
-                    continue
-                lock_taken = True
-                try:
-                    vacation_ns = t_wake - q.last_busy_end_ns
-                    busy_start = time.monotonic_ns()
-                    while True:
-                        burst = q.poll(self.burst_size)
-                        if burst:
-                            items += len(burst)
-                            if wake % self._lat_every == 0:
-                                now = time.monotonic_ns()
-                                sample = [(now - ts) / 1e3
-                                          for ts, _ in burst[:4]]
-                                with self._stats_lock:
-                                    st.latency_us.extend(sample)
-                            self.process([it for _, it in burst])
-                        did = self.idle_work() if self.idle_work else False
-                        if not burst and not did:
-                            break
-                    busy_end = time.monotonic_ns()
-                    q.last_busy_end_ns = busy_end
-                    policy.on_cycle_end((busy_end - busy_start) / 1e3,
-                                        max(vacation_ns / 1e3, 1e-3))
-                finally:
-                    q.lock.release()
+            # sweep own queues first; with steal, keep visiting the longest
+            # unvisited backlog until none remains — mirroring the
+            # simulator's sweep so both backends run the same semantics
+            targets = list(slot.queues)
+            visited = set(targets)
+            si = 0
+            while si < len(targets):
+                qi = targets[si]
+                si += 1
+                q = self.queues[qi]
+                if q.lock.try_acquire():
+                    lock_taken = True
+                    try:
+                        busy_start = time.monotonic_ns()
+                        # vacation = unattended time up to lock acquisition
+                        # (not wake: earlier queues in this sweep took time)
+                        vacation_ns = busy_start - q.last_busy_end_ns
+                        while True:
+                            burst = q.poll(self.burst_size)
+                            if burst:
+                                items += len(burst)
+                                if wake % self._lat_every == 0:
+                                    now = time.monotonic_ns()
+                                    sample = [(now - ts) / 1e3
+                                              for ts, _ in burst[:4]]
+                                    with self._stats_lock:
+                                        st.latency_us.extend(sample)
+                                self.process([it for _, it in burst])
+                            did = self.idle_work() if self.idle_work else False
+                            if not burst and not did:
+                                break
+                        busy_end = time.monotonic_ns()
+                        q.last_busy_end_ns = busy_end
+                        policy.on_cycle_end((busy_end - busy_start) / 1e3,
+                                            max(vacation_ns / 1e3, 1e-3))
+                        with self._stats_lock:
+                            self._cycles_q[qi] += 1
+                    finally:
+                        q.lock.release()
+                if si == len(targets) and slot.steal:
+                    # own/stolen queues done: steal the longest unvisited
+                    # backlog next (post-drain depths, like the simulator)
+                    best, cand = 0, -1
+                    for j, qq in enumerate(self.queues):
+                        if j not in visited and len(qq) > best:
+                            best, cand = len(qq), j
+                    if cand >= 0:
+                        targets.append(cand)
+                        visited.add(cand)
             t_cpu1 = time.thread_time_ns()
             with self._stats_lock:
                 st.wakeups += 1
@@ -160,7 +221,7 @@ class Runtime:
                     st.cycles += 1
             wake += 1
             sleep_ns = policy.on_wake(WakeContext(
-                primary=lock_taken, items=items,
+                primary=lock_taken or not slot.demote_on_miss, items=items,
                 # ns since run start, matching the simulator's clock
                 now_ns=time.monotonic_ns() - st.started_ns))
             if sleep_ns > 0:
@@ -169,15 +230,20 @@ class Runtime:
     # -- workload replay ---------------------------------------------------------
     def run(self, workload, *, duration_us: float,
             payload: Callable[[int], object] = lambda i: i,
-            seed: int = 0, drain_timeout_s: float = 5.0) -> RunStats:
+            seed: int = 0, drain_timeout_s: float = 5.0,
+            dispatcher=None) -> RunStats:
         """Replay ``workload`` against the queues in real time, then stop.
 
         Arrivals are generated by ``workload.iter_arrivals`` and pushed at
         their scheduled offsets (a software traffic generator on the same
-        host).  Returns the unified ``RunStats`` — directly comparable to
+        host); ``dispatcher`` (default round-robin, the historical
+        behavior) picks the queue each arrival lands in.  Returns the
+        unified ``RunStats`` — directly comparable to
         ``repro.runtime.sim.simulate_run`` for the same policy/workload.
         """
         rng = np.random.default_rng(seed)
+        dispatcher = dispatcher or RoundRobinDispatch()
+        dispatcher.reset(len(self.queues), rng)
         self.start()
         t0 = time.monotonic_ns()
         n = 0
@@ -188,7 +254,8 @@ class Runtime:
                 time.sleep(gap_ns / 1e9)
             else:
                 max_lag_ns = max(max_lag_ns, -gap_ns)
-            self.queues[n % len(self.queues)].push(payload(n))
+            backlogs = [len(q) for q in self.queues]
+            self.queues[dispatcher.pick(n, backlogs)].push(payload(n))
             n += 1
         tail_ns = t0 + int(duration_us * 1e3) - time.monotonic_ns()
         if tail_ns > 0:

@@ -2,12 +2,18 @@
 
 Generalizes the paper-specific renewal simulator (Sec 4/5 apparatus) into
 an engine that executes an arbitrary ``RetrievalPolicy`` against an
-arbitrary ``Workload``: M pollers share one queue, a waking poller races
-for the lock, the winner drains at deterministic rate mu (busy-period
-recursion, arrivals drawn from the workload meanwhile), losers re-sleep
-whatever the policy tells them.  Sleep overshoot follows a
-measured-from-the-paper affine model (Table 1) so "what if this policy
-ran on nanosleep?" is answerable without kernel patches.
+arbitrary ``Workload`` over one or more Rx queues: a ``Dispatcher``
+splits arrivals across queues (RSS emulation), an ``Assignment`` decides
+which threads sweep which queues, a waking poller races each queue's
+lock, the winner drains at deterministic rate mu (busy-period recursion,
+arrivals drawn from the workload meanwhile), losers re-sleep whatever
+the policy tells them.  Sleep overshoot follows a measured-from-the-
+paper affine model (Table 1) so "what if this policy ran on nanosleep?"
+is answerable without kernel patches.
+
+With ``n_queues=1`` and the default round-robin dispatcher the engine
+reduces *exactly* to the original single-queue event sequence — same
+seed, same wakeups/cycles/drops — which the regression tests pin down.
 
 Aggregate-exact accounting: arrivals are *counts per window*
 (``workload.counts_in``), never per-packet events, so a 10s line-rate
@@ -24,8 +30,10 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from .assignment import SharedAssignment
+from .dispatch import RoundRobinDispatch
 from .policy import WakeContext
-from .stats import Reservoir, RunStats
+from .stats import QueueStats, Reservoir, RunStats
 
 __all__ = [
     "SleepModel",
@@ -81,7 +89,8 @@ class SimRunConfig:
 
     duration_us: float = 1_000_000.0
     service_rate_mpps: float = 29.76          # mu (packets / us)
-    queue_capacity: int = 1024                # Rx descriptors (paper default)
+    queue_capacity: int = 1024                # Rx descriptors *per queue*
+    n_queues: int = 1                         # Rx queues (RSS rings)
     sleep_model: SleepModel = HR_SLEEP_MODEL
     wake_cost_us: float = 1.0                 # poll+return CPU cost per wake
     # OS interference (paper Sec 5.6): each wake delayed by Exp(mean) w.p. q.
@@ -99,79 +108,145 @@ class SimRunConfig:
     latency_reservoir: int = 262_144
 
 
-def simulate_run(policy, workload, cfg: SimRunConfig | None = None) -> RunStats:
-    """Execute ``policy`` against ``workload`` in simulated time."""
+def simulate_run(policy, workload, cfg: SimRunConfig | None = None, *,
+                 dispatcher=None, assignment=None) -> RunStats:
+    """Execute ``policy`` against ``workload`` in simulated time.
+
+    ``dispatcher`` (default ``RoundRobinDispatch``) splits arrivals
+    across ``cfg.n_queues`` Rx queues; ``assignment`` (default
+    ``SharedAssignment``) maps poller threads to queues.  Spinning
+    policies use the analytic fluid model and ignore both (a sweeping
+    core sees the union of all rings).
+    """
     cfg = cfg or SimRunConfig()
     if getattr(policy, "spin", False):
         return _simulate_spin(policy, workload, cfg)
 
     rng = np.random.default_rng(cfg.seed)
     workload.reset(rng)
-    policy.reset()
-    m = policy.threads
+    nq = max(int(cfg.n_queues), 1)
+    dispatcher = dispatcher or RoundRobinDispatch()
+    dispatcher.reset(nq, rng)
+    assignment = assignment or SharedAssignment()
+    slots = assignment.slots(policy, nq)
+    # distinct policy objects, in slot order (shared: just `policy`;
+    # dedicated: one clone per queue)
+    pols, seen = [], set()
+    for s in slots:
+        if id(s.policy) not in seen:
+            seen.add(id(s.policy))
+            pols.append(s.policy)
+    for p in pols:
+        p.reset()
+    m = len(slots)
     mu = cfg.service_rate_mpps
 
     # Threads are launched actively (paper Sec 5): first wakes land within
     # one short timeout, not spread over T_L (that would fabricate a startup
     # backlog transient the real system does not have).
-    t_s0 = policy.on_wake(WakeContext(primary=True)) / 1e3
-    wake_at = rng.uniform(0.0, max(t_s0, 1e-3), size=m)
+    wake_at = np.empty(m)
+    for p in pols:
+        idxs = [i for i, s in enumerate(slots) if s.policy is p]
+        t_s0 = p.on_wake(WakeContext(primary=True)) / 1e3
+        wake_at[idxs] = rng.uniform(0.0, max(t_s0, 1e-3), size=len(idxs))
 
-    backlog = 0.0
+    backlog = np.zeros(nq)
     last_advanced = 0.0      # arrivals accounted up to here
-    busy_until = 0.0         # lock held until this time
-    last_busy_end = 0.0
+    busy_until = np.zeros(nq)         # each lock held until this time
+    last_busy_end = np.zeros(nq)
 
     offered = dropped = serviced = busy_tries = wakeups = 0
+    truncations = 0
+    offered_q = np.zeros(nq, dtype=np.int64)
+    dropped_q = np.zeros(nq, dtype=np.int64)
+    serviced_q = np.zeros(nq, dtype=np.int64)
+    busy_tries_q = np.zeros(nq, dtype=np.int64)
+    cycles_q = np.zeros(nq, dtype=np.int64)
     vac, bus, nvs = [], [], []
     lat = Reservoir(cfg.latency_reservoir, seed=cfg.seed)
     awake_us = 0.0
-    t_s = t_s0
 
     nbins = int(cfg.duration_us / cfg.timeseries_bin_us) if cfg.timeseries_bin_us else 0
     b_rho = np.zeros(max(nbins, 1)); b_ts = np.zeros(max(nbins, 1))
     b_srv = np.zeros(max(nbins, 1)); b_off = np.zeros(max(nbins, 1))
     b_cnt = np.zeros(max(nbins, 1))
 
-    def advance_arrivals(to_t: float) -> None:
-        """Accumulate workload arrivals on [last_advanced, to_t); drops
+    def admit(q: int, n: int, at_t: float) -> None:
+        """Room-clipped enqueue of ``n`` arrivals into queue ``q``; drops
         beyond queue capacity are counted (Rx-ring semantics)."""
-        nonlocal backlog, offered, dropped, last_advanced
+        nonlocal offered, dropped
+        offered += n
+        offered_q[q] += n
+        room = cfg.queue_capacity - backlog[q]
+        if n > room:
+            d = int(n - max(room, 0))
+            dropped += d
+            dropped_q[q] += d
+            n = int(max(room, 0))
+        backlog[q] += n
+        if nbins:
+            b = min(int(at_t / cfg.timeseries_bin_us), nbins - 1)
+            b_off[b] += n + 0.0
+
+    def advance_arrivals(to_t: float) -> None:
+        """Accumulate workload arrivals on [last_advanced, to_t) and
+        dispatch them across the queues."""
+        nonlocal last_advanced
         if to_t <= last_advanced:
             return
         n = workload.counts_in(last_advanced, to_t)
-        offered += n
-        room = cfg.queue_capacity - backlog
-        if n > room:
-            dropped += int(n - max(room, 0))
-            n = int(max(room, 0))
-        backlog += n
-        if nbins:
-            b = min(int(last_advanced / cfg.timeseries_bin_us), nbins - 1)
-            b_off[b] += n + 0.0
+        if nq == 1:
+            admit(0, n, last_advanced)
+        elif n > 0:
+            parts = dispatcher.split(int(n), backlog)
+            for q in range(nq):
+                if parts[q]:
+                    admit(q, int(parts[q]), last_advanced)
         last_advanced = to_t
 
-    def drain(t_start: float) -> tuple[float, int]:
-        """Busy-period recursion: serve the backlog at rate mu, collect
-        workload arrivals meanwhile, repeat until empty (round-capped so
-        saturated runs still terminate; leftovers stay queued)."""
-        nonlocal backlog, offered, dropped, last_advanced
+    def drain(q: int, t_start: float) -> tuple[float, int]:
+        """Busy-period recursion on queue ``q``: serve its backlog at rate
+        mu, dispatch workload arrivals meanwhile (this queue's share
+        continues the recursion, other queues just accumulate), repeat
+        until empty (round-capped so saturated runs still terminate;
+        leftovers stay queued and the truncation is counted)."""
+        nonlocal offered, dropped, last_advanced, truncations
         total_t = 0.0
         served = 0.0
         cursor = t_start
         rounds = 0
-        while backlog >= 1.0 and rounds < 64:
-            dt = backlog / mu
-            served += backlog
+        while backlog[q] >= 1.0 and rounds < 64:
+            dt = backlog[q] / mu
+            served += float(backlog[q])
             total_t += dt
             n = workload.counts_in(cursor, cursor + dt)
-            offered += n
             cursor += dt
-            if n > cfg.queue_capacity:
-                dropped += n - cfg.queue_capacity
-                n = cfg.queue_capacity
-            backlog = float(n)
+            if nq == 1:
+                own = int(n)
+            else:
+                own = 0
+                if n > 0:
+                    parts = dispatcher.split(int(n), backlog)
+                    own = int(parts[q])
+                    for j in range(nq):
+                        if j != q and parts[j]:
+                            admit(j, int(parts[j]), cursor)
+            offered += own
+            offered_q[q] += own
+            if own > cfg.queue_capacity:
+                d = own - cfg.queue_capacity
+                dropped += d
+                dropped_q[q] += d
+                own = cfg.queue_capacity
+            backlog[q] = float(own)
+            if nbins:
+                # bin the drained queue's own busy-period arrivals too, so
+                # sum(offered_series * bin) tracks RunStats.offered
+                b = min(int(cursor / cfg.timeseries_bin_us), nbins - 1)
+                b_off[b] += own + 0.0
             rounds += 1
+        if backlog[q] >= 1.0:
+            truncations += 1
         last_advanced = max(last_advanced, cursor)
         return total_t, int(served)
 
@@ -197,47 +272,79 @@ def simulate_run(policy, workload, cfg: SimRunConfig | None = None) -> RunStats:
         awake_us += cfg.wake_cost_us
         advance_arrivals(t)
 
-        if t < busy_until:
-            # trylock failed: another poller is draining => backup role.
-            busy_tries += 1
-            t_b = policy.on_wake(WakeContext(primary=False, now_ns=int(t * 1e3))) / 1e3
+        slot = slots[i]
+        pol = slot.policy
+        lock_taken = False
+        t_cursor = t
+        srv_total = 0
+        targets = list(slot.queues)
+        visited = set(targets)
+        si = 0
+        while si < len(targets):
+            q = targets[si]
+            si += 1
+            if t_cursor < busy_until[q]:
+                # trylock failed: another poller is draining this queue.
+                busy_tries += 1
+                busy_tries_q[q] += 1
+            else:
+                # trylock won: primary for this queue. Vacation ended now.
+                lock_taken = True
+                v = t_cursor - float(last_busy_end[q])
+                n_v = float(backlog[q])
+                b_time, srv = drain(q, t_cursor)
+                serviced += srv
+                serviced_q[q] += srv
+                srv_total += srv
+                cycles_q[q] += 1
+                busy_until[q] = t_cursor + b_time
+                last_busy_end[q] = busy_until[q]
+                awake_us += b_time
+
+                vac.append(v); bus.append(b_time); nvs.append(n_v)
+                # Latency: packets found at busy start waited (uniform
+                # arrival in V) V/2 on average + their drain position.
+                # Sample a handful per cycle for percentiles.
+                if n_v >= 1:
+                    k = min(int(n_v), 8)
+                    arr = rng.uniform(0.0, max(v, 1e-9), size=k)      # age
+                    pos = np.sort(rng.uniform(0.0, n_v, size=k)) / mu
+                    lat.extend((max(v, 1e-9) - arr + pos).tolist())
+
+                pol.on_cycle_end(b_time, max(v, 1e-9))
+                t_cursor = float(busy_until[q])
+            if si == len(targets) and slot.steal:
+                # own queues done: steal from the longest unvisited backlog
+                cand, best = -1, 1.0
+                for j in range(nq):
+                    if j not in visited and backlog[j] >= best:
+                        cand, best = j, float(backlog[j])
+                if cand >= 0:
+                    targets.append(cand)
+                    visited.add(cand)
+
+        if not lock_taken:
+            # every ring contended: backup role (unless this thread is its
+            # ring's only home poller, in which case it keeps its cadence)
+            t_b = pol.on_wake(WakeContext(primary=not slot.demote_on_miss,
+                                          now_ns=int(t * 1e3))) / 1e3
             delay = float(cfg.sleep_model.sample(t_b, rng))
             if cfg.interference_prob and rng.random() < cfg.interference_prob:
                 delay += rng.exponential(cfg.interference_mean_us)
             wake_at[i] = t + delay
             continue
 
-        # trylock won: primary. Vacation ended at t.
-        v = t - last_busy_end
-        n_v = backlog
-        b_time, srv = drain(t)
-        serviced += srv
-        busy_until = t + b_time
-        last_busy_end = busy_until
-        awake_us += b_time
-
-        vac.append(v); bus.append(b_time); nvs.append(n_v)
-        # Latency: packets found at busy start waited (uniform arrival in V)
-        # V/2 on average + their drain position; packets arriving during B
-        # wait ~ residual drain.  Sample a handful per cycle for percentiles.
-        if n_v >= 1:
-            k = min(int(n_v), 8)
-            arr = rng.uniform(0.0, max(v, 1e-9), size=k)         # age at t
-            pos = np.sort(rng.uniform(0.0, n_v, size=k)) / mu    # drain slot
-            lat.extend((max(v, 1e-9) - arr + pos).tolist())
-
-        policy.on_cycle_end(b_time, max(v, 1e-9))
-        t_s = policy.on_wake(WakeContext(primary=True,
-                                         now_ns=int(busy_until * 1e3))) / 1e3
+        t_s = pol.on_wake(WakeContext(primary=True,
+                                      now_ns=int(t_cursor * 1e3))) / 1e3
         if nbins:
             b = min(int(t / cfg.timeseries_bin_us), nbins - 1)
-            b_rho[b] += getattr(policy, "rho", np.nan)
-            b_ts[b] += t_s; b_srv[b] += srv; b_cnt[b] += 1
+            b_rho[b] += getattr(pol, "rho", np.nan)
+            b_ts[b] += t_s; b_srv[b] += srv_total; b_cnt[b] += 1
 
         delay = float(cfg.sleep_model.sample(t_s, rng))
         if cfg.interference_prob and rng.random() < cfg.interference_prob:
             delay += rng.exponential(cfg.interference_mean_us)
-        wake_at[i] = busy_until + delay
+        wake_at[i] = t_cursor + delay
 
     cnt = np.maximum(b_cnt, 1)
     nbins_eff = max(nbins, 1)
@@ -250,6 +357,14 @@ def simulate_run(policy, workload, cfg: SimRunConfig | None = None) -> RunStats:
         awake_ns=int(awake_us * 1e3), started_ns=0,
         stopped_ns=int(cfg.duration_us * 1e3),
         latency_us=lat,
+        per_queue=[QueueStats(queue=q,
+                              offered=int(offered_q[q]),
+                              dropped=int(dropped_q[q]),
+                              serviced=int(serviced_q[q]),
+                              busy_tries=int(busy_tries_q[q]),
+                              cycles=int(cycles_q[q]))
+                   for q in range(nq)],
+        drain_truncations=truncations,
         vacations_us=np.asarray(vac),
         busies_us=np.asarray(bus),
         n_v=np.asarray(nvs),
@@ -267,11 +382,13 @@ def _simulate_spin(policy, workload, cfg: SimRunConfig) -> RunStats:
 
     One dedicated core polls continuously; CPU is 100% by construction;
     latency is just the drain position (no vacations); loss only beyond
-    saturation.
+    saturation.  A spinning sweep sees the union of all Rx rings, so
+    multi-queue runs aggregate to one fluid queue of total capacity.
     """
     rng = np.random.default_rng(cfg.seed)
     workload.reset(rng)
     policy.reset()
+    q_cap = cfg.queue_capacity * max(int(cfg.n_queues), 1)
     step = 10.0
     t = 0.0
     offered = dropped = serviced = 0
@@ -284,9 +401,9 @@ def _simulate_spin(policy, workload, cfg: SimRunConfig) -> RunStats:
         do = min(backlog + n, cap)
         serviced += int(do)
         backlog = backlog + n - do
-        if backlog > cfg.queue_capacity:
-            dropped += int(backlog - cfg.queue_capacity)
-            backlog = float(cfg.queue_capacity)
+        if backlog > q_cap:
+            dropped += int(backlog - q_cap)
+            backlog = float(q_cap)
         lat_num += backlog * step        # area under queue curve (Little)
         t += step
     mean_lat = lat_num / max(serviced, 1)
@@ -304,7 +421,7 @@ def _simulate_spin(policy, workload, cfg: SimRunConfig) -> RunStats:
         latency_override={
             "mean": float(mean_lat + 1.0 / cfg.service_rate_mpps),
             "p99": float(mean_lat * 3 + 1.0 / cfg.service_rate_mpps),
-            "worst": float(cfg.queue_capacity / cfg.service_rate_mpps),
+            "worst": float(q_cap / cfg.service_rate_mpps),
         },
         vacations_us=np.zeros(1), busies_us=np.asarray([cfg.duration_us]),
         n_v=np.zeros(1),

@@ -16,11 +16,12 @@ value seen has equal probability of being in the sample).
 from __future__ import annotations
 
 import random
+import warnings
 from dataclasses import dataclass, field
 
 import numpy as np
 
-__all__ = ["Reservoir", "RunStats"]
+__all__ = ["Reservoir", "QueueStats", "RunStats"]
 
 
 class Reservoir:
@@ -31,7 +32,7 @@ class Reservoir:
     truthiness guards — keep working unchanged.
     """
 
-    __slots__ = ("capacity", "count", "_buf", "_rng")
+    __slots__ = ("capacity", "count", "_buf", "_rng", "_np_rng")
 
     def __init__(self, capacity: int = 65_536, seed: int = 0):
         if capacity < 1:
@@ -40,6 +41,7 @@ class Reservoir:
         self.count = 0              # total values ever offered
         self._buf: list[float] = []
         self._rng = random.Random(seed)
+        self._np_rng = np.random.default_rng(seed)
 
     def append(self, value: float) -> None:
         self.count += 1
@@ -51,8 +53,29 @@ class Reservoir:
             self._buf[j] = float(value)
 
     def extend(self, values) -> None:
-        for v in values:
-            self.append(v)
+        if not isinstance(values, (list, tuple, np.ndarray)):
+            for v in values:            # generators: no length to batch on
+                self.append(v)
+            return
+        arr = np.asarray(values, dtype=np.float64).ravel()
+        if arr.size == 0:
+            return
+        free = self.capacity - len(self._buf)
+        if free > 0:                    # fill phase, no randomness needed
+            take = min(free, arr.size)
+            self._buf.extend(arr[:take].tolist())
+            self.count += take
+            arr = arr[take:]
+        if arr.size == 0:
+            return
+        # bulk Algorithm R: value #k replaces a random slot iff
+        # randrange(k) < capacity — one vectorized draw for the batch
+        ks = np.arange(self.count + 1, self.count + arr.size + 1)
+        self.count += arr.size
+        js = (self._np_rng.random(arr.size) * ks).astype(np.int64)
+        hit = js < self.capacity
+        for j, v in zip(js[hit].tolist(), arr[hit].tolist()):
+            self._buf[j] = v            # in order: later values win ties
 
     def __len__(self) -> int:
         return len(self._buf)
@@ -76,6 +99,24 @@ class Reservoir:
 
 def _empty() -> np.ndarray:
     return np.empty(0)
+
+
+@dataclass
+class QueueStats:
+    """Per-Rx-queue slice of a run's counters.  Every field sums to the
+    matching ``RunStats`` total across ``RunStats.per_queue`` (the
+    conservation law the multi-queue refactor is tested against)."""
+
+    queue: int
+    offered: int = 0
+    dropped: int = 0
+    serviced: int = 0
+    busy_tries: int = 0
+    cycles: int = 0
+
+    @property
+    def loss_fraction(self) -> float:
+        return self.dropped / max(self.offered, 1)
 
 
 @dataclass
@@ -114,6 +155,14 @@ class RunStats:
     # the workload's schedule.  >> mean inter-arrival gap means the host
     # could not source the workload and the run is NOT sim-comparable.
     feeder_lag_us: float = 0.0
+
+    # multi-queue ingress: one entry per Rx queue (empty when the backend
+    # does not break its counters down, e.g. the spin fluid model)
+    per_queue: list[QueueStats] = field(default_factory=list)
+    # simulator: busy periods cut short by the drain round cap, stranding
+    # backlog until the next wake — nonzero means saturated cycles whose
+    # service was deferred, and summary() warns about it
+    drain_truncations: int = 0
 
     # simulator-only cycle samples and adaptation series
     vacations_us: np.ndarray = field(default_factory=_empty)
@@ -190,6 +239,12 @@ class RunStats:
 
     def summary(self) -> dict:
         """Flat dict of the headline numbers (benchmark CSV rows, logs)."""
+        if self.drain_truncations:
+            warnings.warn(
+                f"{self.drain_truncations} busy period(s) hit the drain "
+                "round cap and stranded backlog until the next wake; "
+                "service/latency numbers understate the saturation",
+                RuntimeWarning, stacklevel=2)
         return {
             "backend": self.backend, "policy": self.policy,
             "workload": self.workload, "wakeups": self.wakeups,
@@ -199,4 +254,6 @@ class RunStats:
             "cpu_fraction": self.cpu_fraction,
             "mean_latency_us": self.mean_latency_us,
             "p99_latency_us": self.p99_latency_us,
+            "n_queues": max(len(self.per_queue), 1),
+            "drain_truncations": self.drain_truncations,
         }

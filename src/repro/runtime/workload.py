@@ -218,6 +218,10 @@ class TraceReplayWorkload:
             raise ValueError("speedup must be > 0")
         if not 0.0 <= jitter < 1.0:
             raise ValueError("jitter must be in [0, 1)")
+        if loop and ts.size > 1 and ts[-1] == ts[0]:
+            raise ValueError(
+                "loop=True needs a trace with nonzero span: all timestamps "
+                "are equal, so each lap would advance time by nothing")
         self.trace_us = ts
         self.speedup = float(speedup)
         self.jitter = float(jitter)
@@ -250,9 +254,11 @@ class TraceReplayWorkload:
             start = self._times[-1]
             gaps = self._lap()
             # restart gap: reuse the first gap (or the mean gap for
-            # single-packet traces) so laps don't collapse onto one instant
+            # single-packet traces) so laps don't collapse onto one
+            # instant; a tiny floor guarantees forward progress even for
+            # near-degenerate traces (zero-span ones are rejected upfront)
             gaps[0] = max(gaps[0], float(np.mean(gaps)) if gaps.size > 1
-                          else 1.0 / max(self.mean_rate_mpps, 1e-9))
+                          else 1.0 / max(self.mean_rate_mpps, 1e-9), 1e-3)
             self._times = np.concatenate([self._times, start + np.cumsum(gaps)])
 
     @property

@@ -3,30 +3,38 @@ the serving path, expressed through the ``repro.runtime`` API.
 
 One ``Server`` composes three pieces instead of hand-rolling a loop:
 
-  - a ``BoundedQueue`` as the request ingress (the "NIC Rx ring");
+  - ``n_queues`` ``BoundedQueue``s as the request ingress (the "NIC Rx
+    rings"), fronted by a ``Dispatcher`` with request affinity (equal
+    affinity keys always land in the same queue, like an RSS flow hash);
   - any ``RetrievalPolicy`` deciding the retrieval cadence;
   - the generic threaded ``Runtime``, whose busy period drains ingress
-    *and* keeps ``engine.pump()`` ticking until the engine goes idle.
+    *and* keeps ``engine.pump()`` ticking until the engine goes idle —
+    with an ``Assignment`` deciding which threads sweep which queues.
 
 So the exact policy object you validated in the simulator serves real
 requests unchanged:
 
-    srv = Server(engine, MetronomePolicy(cfg))
+    srv = Server(engine, MetronomePolicy(cfg), n_queues=4)
     srv.start(); srv.submit(req); ...; stats = srv.stop()
 
 ``MetronomeServer`` / ``BusyPollServer`` are deprecated aliases
 (``Server`` + ``MetronomePolicy`` / ``BusyPollPolicy``); ``ServerStats``
 is the unified ``repro.runtime.RunStats`` under its old name.  Stats
 mirror the paper's evaluation: CPU fraction (awake-time), busy tries,
-retrieval latency (enqueue -> retrieval), time-to-first-token.
+retrieval latency (enqueue -> retrieval), time-to-first-token, and a
+``per_queue`` breakdown when ingress is sharded.
 """
 
 from __future__ import annotations
 
+import threading
 import warnings
+
+import numpy as np
 
 from repro.core.controller import MetronomeConfig
 from repro.core.hr_sleep import hr_sleep
+from repro.runtime.dispatch import FlowHashDispatch, RoundRobinDispatch
 from repro.runtime.policy import BusyPollPolicy, MetronomePolicy
 from repro.runtime.queues import BoundedQueue
 from repro.runtime.runtime import Runtime
@@ -39,32 +47,74 @@ __all__ = ["ServerStats", "Server", "MetronomeServer", "BusyPollServer"]
 _DEFAULT_SERVING_CFG = dict(m=3, v_target_us=2_000.0, t_long_us=50_000.0)
 
 
+def _affinity_key(req):
+    """Stable per-request routing key: a session/user/flow attribute when
+    the request carries one, else its id (unique => effectively random
+    placement, still stable for the request's lifetime)."""
+    for attr in ("session_id", "session", "user", "flow", "id"):
+        key = getattr(req, attr, None)
+        if key is not None:
+            return key
+    return None
+
+
 class Server:
     """Serving ingress: ``Runtime`` + policy + engine, one class for every
-    retrieval strategy."""
+    retrieval strategy.  ``n_queues > 1`` shards ingress across queues
+    with affinity dispatch; ``assignment`` picks the thread↔queue
+    strategy (shared / dedicated / stealing)."""
 
     def __init__(self, engine: InferenceEngine, policy, *,
-                 queue_capacity: int = 1024, sleep_fn=hr_sleep):
+                 queue_capacity: int = 1024, sleep_fn=hr_sleep,
+                 n_queues: int = 1, dispatcher=None, assignment=None):
         self.engine = engine
         self.policy = policy
-        self.queue = BoundedQueue(queue_capacity)
+        self.queues = [BoundedQueue(queue_capacity)
+                       for _ in range(max(n_queues, 1))]
+        self.queue = self.queues[0]        # single-queue back-compat alias
+        self.dispatcher = dispatcher or (
+            FlowHashDispatch() if len(self.queues) > 1 else RoundRobinDispatch())
+        self.dispatcher.reset(len(self.queues), np.random.default_rng(0))
+        self._seq = 0
+        self._submit_lock = threading.Lock()
+        # With one queue the engine was implicitly serialized by the queue
+        # lock (only its holder ingested/pumped).  Sharded ingress has
+        # several lock holders at once, so the engine gets its own lock:
+        # ingest blocks (it is short), pump try-locks — if a peer is
+        # already pumping, this poller reports no progress and re-sleeps.
+        self._engine_lock = threading.Lock()
         self._runtime = Runtime(
-            [self.queue],
+            self.queues,
             process=self._ingest,
             policy=policy,
             sleep_fn=sleep_fn,
             # sample every retrieval: request rates are orders of magnitude
             # below packet rates, so the reservoir absorbs the cost
             latency_sample_every=1,
-            idle_work=engine.pump,
+            idle_work=self._pump,
+            assignment=assignment,
         )
 
     def _ingest(self, reqs: list) -> None:
-        self.engine.submit(reqs)
+        with self._engine_lock:
+            self.engine.submit(reqs)
+
+    def _pump(self) -> bool:
+        if not self._engine_lock.acquire(blocking=False):
+            return False
+        try:
+            return self.engine.pump()
+        finally:
+            self._engine_lock.release()
 
     # -- producer side ---------------------------------------------------------
     def submit(self, req: Request) -> bool:
-        return self.queue.push(req)
+        with self._submit_lock:
+            seq = self._seq
+            self._seq += 1
+        backlogs = [len(q) for q in self.queues]
+        i = self.dispatcher.pick(seq, backlogs, key=_affinity_key(req))
+        return self.queues[i].push(req)
 
     # -- lifecycle --------------------------------------------------------------
     def start(self) -> None:

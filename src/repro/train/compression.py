@@ -15,8 +15,6 @@ which tests/test_train_substrate.py asserts from the lowered text.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 
 from repro.compat import shard_map

@@ -45,7 +45,6 @@ def test_engine_runs_with_int8_kv_and_mostly_agrees():
 def test_engine_int8_cache_dtype():
     eng = _engine(dataclasses.replace(TINY, kv_quant=True))
     leaves = jax.tree.leaves(eng.cache)
-    import jax.numpy as jnp
     dtypes = {str(l.dtype) for l in leaves}
     assert "int8" in dtypes and "float32" in dtypes
     # int8 codes are half the bytes of the bf16 cache

@@ -4,7 +4,6 @@ tests (extension coverage)."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 pytest.importorskip("hypothesis", reason="hypothesis not installed in this environment")
