@@ -66,6 +66,12 @@ def _workloads():
     ]
 
 
+def _p50_us(r) -> float:
+    if r.latency_override or not len(r.latency_us):
+        return r.mean_latency_us          # analytic backends: no samples
+    return float(np.percentile(np.asarray(r.latency_us), 50))
+
+
 def matrix_policies_workloads(quick: bool = False) -> ROWS:
     dur = 100_000.0 if quick else 400_000.0
     rows = []
@@ -74,7 +80,9 @@ def matrix_policies_workloads(quick: bool = False) -> ROWS:
             r = simulate_run(pfn(), wfn(),
                              SimRunConfig(duration_us=dur, seed=12))
             rows.append((f"matrix/{pname}/{wname}", r.mean_latency_us,
+                         f"policy={r.policy};workload={r.workload};"
                          f"cpu={r.cpu_fraction:.3f};"
+                         f"p50_lat_us={_p50_us(r):.2f};"
                          f"p99_lat_us={r.p99_latency_us:.2f};"
                          f"loss_pct={r.loss_fraction * 100:.3f};"
                          f"busy_tries={r.busy_tries};"

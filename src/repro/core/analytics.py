@@ -32,6 +32,8 @@ __all__ = [
     "mean_vacation_general_approx",
     "adaptive_ts",
     "primary_prob",
+    "second_moment_vacation_high",
+    "mean_sojourn_high",
 ]
 
 _EPS = 1e-12
@@ -160,10 +162,57 @@ def mean_vacation_general_approx(t_s, m, p):
 def adaptive_ts(v_target, rho, m, ts_min=0.0, ts_max=np.inf):
     """Eq (12): T_S = M * V_bar * (1-rho)/(1-rho^M), clamped.
 
-    Computed via the geometric-series form T_S = M*V_bar / (1+rho+...+rho^{M-1})
-    which is exact, stable at rho -> 1 (limit V_bar) and rho -> 0 (limit
-    M*V_bar), and never divides by zero.
+    Computed via the geometric-series sum T_S = M*V_bar / (1+rho+...+
+    rho^{M-1}) which is exact, stable at rho -> 1 (limit V_bar) and
+    rho -> 0 (limit M*V_bar), and never divides by zero.  Fully
+    vectorized: every argument (including ``m``) broadcasts, so the
+    batched sweep / calibration layer can evaluate whole grids at once.
     """
     rho = np.clip(np.asarray(rho, dtype=np.float64), 0.0, 1.0)
-    denom = sum(rho**k for k in range(int(m)))
-    return np.clip(m * v_target / denom, ts_min, ts_max)
+    m = np.asarray(m, dtype=np.float64)
+    # geometric sum sum_{k<M} rho^k, switched to its M limit at rho ~ 1
+    near_one = np.abs(1.0 - rho) < 1e-9
+    safe_rho = np.where(near_one, 0.5, rho)
+    denom = np.where(near_one, m,
+                     (1.0 - safe_rho**m) / (1.0 - safe_rho))
+    return np.clip(m * np.asarray(v_target, dtype=np.float64) / denom,
+                   ts_min, ts_max)
+
+
+# ---------------------------------------------------------------------------
+# Latency closed forms (cross-validation targets for the batched engine)
+# ---------------------------------------------------------------------------
+
+def second_moment_vacation_high(t_s, t_l, m):
+    """E[V^2] for the high-load vacation V = min(T_S, U_1..U_{M-1}).
+
+    From E[V^2] = 2 * int_0^{T_S} x * (1 - F(x)) dx with the Eq (5)
+    survival (1 - x/T_L)^{M-1}; substituting u = 1 - x/T_L gives the
+    closed form (c = 1 - T_S/T_L):
+
+        E[V^2] = 2 T_L^2 [ (1 - c^M)/M - (1 - c^{M+1})/(M+1) ]
+
+    M = 1 reduces to T_S^2 (deterministic vacation).
+    """
+    t_s = np.asarray(t_s, dtype=np.float64)
+    t_l = np.asarray(t_l, dtype=np.float64)
+    m = np.asarray(m, dtype=np.float64)
+    c = 1.0 - t_s / t_l
+    return 2.0 * t_l**2 * ((1.0 - c**m) / m - (1.0 - c**(m + 1)) / (m + 1))
+
+
+def mean_sojourn_high(t_s, t_l, m):
+    """All-packet mean time in system, high-load regime: E[V^2]/(2 E[V]).
+
+    Renewal-reward over one (V, B) cycle with fluid drain at mu: the
+    queue-depth integral per cycle is lam*V^2 / (2(1-rho)) and the
+    packets per cycle are lam*V/(1-rho), so the load terms cancel and
+    Little's law leaves the residual-vacation form E[V^2]/(2 E[V]) —
+    independent of rho while the system is stable.  This is exactly the
+    quantity the simulation engines measure as ``mean_sojourn_us``
+    (sampled ``mean_latency_us`` is the vacation-found-packet estimator
+    instead, higher by ~(1+rho)).
+    """
+    ev = mean_vacation_high(t_s, t_l, m)
+    return second_moment_vacation_high(t_s, t_l, m) / np.maximum(
+        2.0 * ev, _EPS)

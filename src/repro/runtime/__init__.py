@@ -20,6 +20,14 @@ Zipf flow-hash skew, or idealized least-loaded — and an ``Assignment``
 per-queue poller sets, or work stealing.  ``RunStats.per_queue`` breaks
 every counter down by queue.
 
+A third execution surface scales *exploration*: ``simulate_batch``
+(batched.py) runs a whole ``SweepGrid`` of static operating points —
+(T_S, T_L, M, n_queues, load, seed) — through a fixed-slot JAX engine in
+one JIT-compiled call, and ``build_operating_table`` (calibrate.py)
+distills such sweeps into an ``OperatingTable`` the controller consumes
+as a calibrated feed-forward term.  Shared environment config
+(``SimRunConfig``, ``SleepModel``) lives in simcore.py.
+
 Adding a retrieval strategy or a traffic scenario is a one-file change:
 implement the protocol, and every backend, benchmark, and the serving
 server can use it.
@@ -33,6 +41,29 @@ from .assignment import (
     ThreadSlot,
     clone_policy,
 )
+# The batched engine (and the calibration layer on top of it) are the
+# only jax-dependent pieces of repro.runtime; load them lazily so the
+# numpy-only event sim / threaded / serving paths neither require jax
+# nor pay its import cost.
+_LAZY_SUBMODULE = {
+    "SweepGrid": "batched",
+    "BatchStats": "batched",
+    "simulate_batch": "batched",
+    "OperatingPoint": "calibrate",
+    "OperatingTable": "calibrate",
+    "CalibrationMismatch": "calibrate",
+    "build_operating_table": "calibrate",
+}
+
+
+def __getattr__(name: str):
+    submodule = _LAZY_SUBMODULE.get(name)
+    if submodule is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    from importlib import import_module
+    value = getattr(import_module(f".{submodule}", __name__), name)
+    globals()[name] = value          # cache: next access skips this hook
+    return value
 from .dispatch import (
     Dispatcher,
     FlowHashDispatch,
@@ -99,4 +130,11 @@ __all__ = [
     "PERFECT_SLEEP_MODEL",
     "SimRunConfig",
     "simulate_run",
+    "SweepGrid",
+    "BatchStats",
+    "simulate_batch",
+    "OperatingPoint",
+    "OperatingTable",
+    "CalibrationMismatch",
+    "build_operating_table",
 ]

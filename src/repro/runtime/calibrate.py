@@ -1,0 +1,294 @@
+"""Calibration layer: batched sweeps -> validated operating tables.
+
+The paper picks (T_S, T_L, M) from closed forms (Eq 6/12/13); the closed
+forms ignore sleep overshoot, wake cost, role churn and queue-capacity
+clipping, so a configuration that is optimal on paper is merely a good
+initial guess.  This module closes the loop empirically:
+
+  1. sweep a dense (T_S, T_L, M) x load grid through the batched JAX
+     engine (``repro.runtime.batched``) — thousands of operating points
+     in one JIT-compiled call;
+  2. cross-check every point's measured mean vacation against the
+     ``repro.core.analytics`` closed form (``mean_vacation_general``) —
+     points where engine and analysis disagree wildly are discarded as
+     untrustworthy rather than silently selected;
+  3. optionally spot-check selected points against the exact
+     event-driven engine (``simulate_run``) within the batched engine's
+     documented parity tolerance;
+  4. for each offered load, select the cheapest point (min CPU) whose
+     mean latency meets the target -> an ``OperatingTable``.
+
+The table is a feed-forward term for the runtime control plane:
+``MetronomeController``/``MetronomePolicy`` accept it (the Eq 10 EWMA
+keeps estimating rho; the table maps rho to a pre-validated operating
+point), ``Server(..., operating_table=...)`` loads one at startup, and
+``OperatingTable.save/load`` round-trips through JSON so calibration can
+run offline (e.g. benchmarks/sweep_frontier.py) and deploy later.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, replace
+
+import numpy as np
+
+from repro.core import analytics
+
+from .batched import SweepGrid, simulate_batch
+from .simcore import SimRunConfig
+
+__all__ = [
+    "OperatingPoint",
+    "OperatingTable",
+    "CalibrationMismatch",
+    "analytic_guard_mask",
+    "build_operating_table",
+]
+
+
+class CalibrationMismatch(AssertionError):
+    """A selected operating point failed its event-engine spot check."""
+
+
+@dataclass(frozen=True)
+class OperatingPoint:
+    """One calibrated row: at load ``rho``, run (t_s, t_l, m) and expect
+    the predicted mean latency / CPU.  ``meets_target=False`` marks
+    loads where no swept point met the latency target (the returned
+    point is then the latency-minimizing fallback)."""
+
+    rho: float
+    t_s_us: float
+    t_l_us: float
+    m: int
+    mean_latency_us: float
+    cpu_fraction: float
+    loss_fraction: float
+    meets_target: bool = True
+
+
+@dataclass(frozen=True)
+class OperatingTable:
+    """Load -> operating point map with interpolating lookups.
+
+    ``timeouts_us(rho)`` is the feed-forward surface consumed by
+    ``MetronomeController``: piecewise-linear interpolation of (T_S,
+    T_L) between calibrated loads, clamped to the calibrated range.
+    ``lookup(rho)`` returns the governing row — the nearest calibrated
+    load at or *above* the request, so feasibility is conservative.
+    """
+
+    target_mean_latency_us: float
+    service_rate_mpps: float
+    points: tuple[OperatingPoint, ...]
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "points",
+            tuple(sorted(self.points, key=lambda p: p.rho)))
+        if not self.points:
+            raise ValueError("OperatingTable needs at least one point")
+
+    # -- lookups ---------------------------------------------------------------
+    @property
+    def rhos(self) -> np.ndarray:
+        return np.asarray([p.rho for p in self.points])
+
+    def lookup(self, rho: float) -> OperatingPoint:
+        i = int(np.searchsorted(self.rhos, rho, side="left"))
+        return self.points[min(i, len(self.points) - 1)]
+
+    def timeouts_us(self, rho: float) -> tuple[float, float]:
+        rhos = self.rhos
+        t_s = float(np.interp(rho, rhos, [p.t_s_us for p in self.points]))
+        t_l = float(np.interp(rho, rhos, [p.t_l_us for p in self.points]))
+        return t_s, t_l
+
+    def t_s_us(self, rho: float) -> float:
+        return self.timeouts_us(rho)[0]
+
+    # -- persistence -----------------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({
+            "target_mean_latency_us": self.target_mean_latency_us,
+            "service_rate_mpps": self.service_rate_mpps,
+            "points": [asdict(p) for p in self.points],
+        }, indent=2)
+
+    @classmethod
+    def from_json(cls, text: str) -> "OperatingTable":
+        d = json.loads(text)
+        return cls(target_mean_latency_us=d["target_mean_latency_us"],
+                   service_rate_mpps=d["service_rate_mpps"],
+                   points=tuple(OperatingPoint(**p) for p in d["points"]))
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @classmethod
+    def load(cls, path) -> "OperatingTable":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+def analytic_guard_mask(vac_measured, t_s_grid, t_l_grid, m_grid, rhos, *,
+                        guard_rel: float, slot_us: float) -> np.ndarray:
+    """True where a sweep point's measured mean vacation roughly agrees
+    with the App-C closed form (``mean_vacation_general``); a
+    disagreement beyond ``guard_rel`` (plus a couple of slots of
+    quantization allowance) means the engine and the model describe
+    different systems and the point must not be selected silently.
+
+    ``vac_measured`` has the seed-averaged lattice shape
+    ``(len(t_s_grid), len(t_l_grid), len(m_grid), 1, len(rhos))``.
+    Shared by ``build_operating_table`` and the sweep-frontier
+    benchmark's fixed baseline, so both sides filter candidates with the
+    *same* rule (the calibrated-vs-fixed verdict compares argmins over
+    one candidate set).
+    """
+    ts_ax = np.atleast_1d(np.asarray(t_s_grid, dtype=np.float64))
+    tl_ax = np.atleast_1d(np.asarray(t_l_grid, dtype=np.float64))
+    m_ax = np.atleast_1d(np.asarray(m_grid))
+    rhos = np.atleast_1d(np.asarray(rhos, dtype=np.float64))
+    TS, TL, M, _, RHO = np.meshgrid(ts_ax, tl_ax, m_ax, [0], rhos,
+                                    indexing="ij")
+    vac_pred = analytics.mean_vacation_general(
+        TS, TL, M, analytics.primary_prob(RHO))
+    return np.abs(vac_measured - vac_pred) <= (guard_rel * vac_pred
+                                               + 2.0 * slot_us)
+
+
+def _event_sim_point(p: OperatingPoint, cfg: SimRunConfig, rate_mpps: float):
+    """Run one operating point through the exact event engine."""
+    from repro.core.controller import MetronomeConfig
+
+    from .policy import MetronomePolicy
+    from .sim import simulate_run
+    from .workload import PoissonWorkload
+
+    policy = MetronomePolicy(
+        MetronomeConfig(m=p.m, v_target_us=p.t_s_us, t_long_us=p.t_l_us,
+                        ts_min_us=min(1.0, p.t_s_us)),
+        adaptive=False)
+    return simulate_run(policy, PoissonWorkload(rate_mpps), cfg)
+
+
+def build_operating_table(
+    *,
+    rhos,
+    target_mean_latency_us: float,
+    t_s_grid,
+    t_l_grid,
+    m_grid=(2, 3, 4),
+    cfg: SimRunConfig | None = None,
+    seeds=(0, 1),
+    slot_us: float = 0.5,
+    max_loss: float = 1e-3,
+    analytic_guard_rel: float = 0.6,
+    spot_check: int = 0,
+    spot_check_rel: float = 0.25,
+    sweep=None,
+) -> OperatingTable:
+    """Sweep (t_s x t_l x m x rho x seed) through the batched engine and
+    distill an ``OperatingTable``: per load, the minimum-CPU point whose
+    seed-averaged mean latency meets ``target_mean_latency_us`` (and
+    loses at most ``max_loss``).
+
+    ``analytic_guard_rel`` drops points whose measured mean vacation
+    strays that far (relative) from the App-C closed form — a
+    disagreement that large means the engine and the model describe
+    different systems, and such a point must not be *selected* silently
+    (see ``analytic_guard_mask``).  ``spot_check > 0`` re-runs that many
+    selected points through the exact event engine and raises
+    ``CalibrationMismatch`` if mean sojourn or CPU disagree beyond
+    ``spot_check_rel`` (plus a small absolute floor) — the batched
+    engine's documented parity band.  ``sweep`` accepts a precomputed
+    ``BatchStats`` for exactly this grid (same axes, same cfg/slot_us —
+    e.g. one the caller also uses for frontier analysis) so the batch
+    isn't simulated twice; its grid shape is validated.
+    """
+    cfg = cfg or SimRunConfig(duration_us=60_000.0)
+    rhos = np.atleast_1d(np.asarray(rhos, dtype=np.float64))
+    mu = cfg.service_rate_mpps
+    grid = SweepGrid.product(t_s_us=t_s_grid, t_l_us=t_l_grid, m=m_grid,
+                             n_queues=(cfg.n_queues,),
+                             rate_mpps=rhos * mu, seeds=seeds)
+    if sweep is None:
+        bs = simulate_batch(grid, cfg, slot_us=slot_us)
+    else:
+        # the precomputed sweep must be THIS lattice simulated in THIS
+        # environment — matching shape alone would let metrics from one
+        # grid be labeled with another grid's parameters
+        same_axes = (sweep.grid.shape == grid.shape and all(
+            np.array_equal(getattr(sweep.grid, f), getattr(grid, f))
+            for f in ("t_s_us", "t_l_us", "m", "n_queues", "rate_mpps",
+                      "seed")))
+        if not (same_axes and sweep.cfg == cfg
+                and sweep.slot_us == float(slot_us)):
+            raise ValueError(
+                "precomputed sweep does not match the requested lattice/"
+                "environment (grid axes, SimRunConfig and slot_us must "
+                "all be identical)")
+        bs = sweep
+
+    # seed-averaged metrics on the (ts, tl, m, nq, rho, seed) lattice
+    lat = bs.reshaped("mean_latency_us").mean(axis=-1)
+    cpu = bs.reshaped("cpu_fraction").mean(axis=-1)
+    loss = bs.reshaped("loss_fraction").mean(axis=-1)
+    vac = bs.reshaped("mean_vacation_us").mean(axis=-1)
+
+    ts_ax = np.atleast_1d(np.asarray(t_s_grid, dtype=np.float64))
+    tl_ax = np.atleast_1d(np.asarray(t_l_grid, dtype=np.float64))
+    m_ax = np.atleast_1d(np.asarray(m_grid))
+    # analytic guard: engine and closed form must roughly agree
+    valid = analytic_guard_mask(vac, ts_ax, tl_ax, m_ax, rhos,
+                                guard_rel=analytic_guard_rel,
+                                slot_us=slot_us)
+    feasible = valid & (lat <= target_mean_latency_us) & (loss <= max_loss)
+
+    points = []
+    big = np.inf
+    for k, rho in enumerate(rhos):
+        feas_k = feasible[..., k]
+        if feas_k.any():
+            cpu_k = np.where(feas_k, cpu[..., k], big)
+            i, j, l, _ = np.unravel_index(int(np.argmin(cpu_k)),
+                                          cpu_k.shape)
+            met = True
+        else:
+            lat_k = np.where(valid[..., k], lat[..., k], big)
+            if not np.isfinite(lat_k).any():
+                lat_k = lat[..., k]                 # last resort: raw
+            i, j, l, _ = np.unravel_index(int(np.argmin(lat_k)),
+                                          lat_k.shape)
+            met = False
+        points.append(OperatingPoint(
+            rho=float(rho), t_s_us=float(ts_ax[i]), t_l_us=float(tl_ax[j]),
+            m=int(m_ax[l]), mean_latency_us=float(lat[i, j, l, 0, k]),
+            cpu_fraction=float(cpu[i, j, l, 0, k]),
+            loss_fraction=float(loss[i, j, l, 0, k]), meets_target=met))
+
+    table = OperatingTable(target_mean_latency_us=target_mean_latency_us,
+                           service_rate_mpps=mu, points=tuple(points))
+
+    if spot_check:
+        check_cfg = replace(cfg, interference_prob=0.0,
+                            stall_rate_per_us=0.0)
+        idxs = np.linspace(0, len(points) - 1,
+                           min(spot_check, len(points))).astype(int)
+        for i in sorted(set(idxs.tolist())):
+            p = points[i]
+            rs = _event_sim_point(p, check_cfg, p.rho * mu)
+            lat_err = abs(rs.mean_sojourn_us - p.mean_latency_us)
+            cpu_err = abs(rs.cpu_fraction - p.cpu_fraction)
+            if (lat_err > spot_check_rel * p.mean_latency_us + 2.0
+                    or cpu_err > spot_check_rel * p.cpu_fraction + 0.03):
+                raise CalibrationMismatch(
+                    f"operating point {p} failed its event-engine spot "
+                    f"check: event mean sojourn {rs.mean_sojourn_us:.2f}us "
+                    f"vs batched {p.mean_latency_us:.2f}us, event cpu "
+                    f"{rs.cpu_fraction:.3f} vs batched "
+                    f"{p.cpu_fraction:.3f}")
+    return table

@@ -102,16 +102,22 @@ class MetronomePolicy:
     Wraps one shared ``MetronomeController``: primaries sleep the adaptive
     T_S, backups sleep T_L.  ``adaptive=False`` freezes T_S at the
     vacation target (the paper's static-configuration ablations).
+    ``operating_table`` installs a calibrated feed-forward term (an
+    ``repro.runtime.calibrate.OperatingTable`` or anything with
+    ``timeouts_us(rho)``): the Eq 10 EWMA keeps estimating rho, and the
+    table maps that estimate to a pre-validated (T_S, T_L) operating
+    point, blended with Eq 12 by ``cfg.feedforward_weight``.
     """
 
     name = "metronome"
     spin = False
 
     def __init__(self, cfg: MetronomeConfig | None = None, *,
-                 adaptive: bool = True):
+                 adaptive: bool = True, operating_table=None):
         self.cfg = cfg or MetronomeConfig()
         self.adaptive = adaptive
-        self.controller = MetronomeController(self.cfg)
+        self.controller = MetronomeController(self.cfg,
+                                              feedforward=operating_table)
         self.reset()
 
     @property

@@ -1,4 +1,4 @@
-"""Discrete-event simulation backend: any policy × any workload.
+"""Event-driven simulation engine: any policy × any workload.
 
 Generalizes the paper-specific renewal simulator (Sec 4/5 apparatus) into
 an engine that executes an arbitrary ``RetrievalPolicy`` against an
@@ -10,6 +10,12 @@ arrivals drawn from the workload meanwhile), losers re-sleep whatever
 the policy tells them.  Sleep overshoot follows a measured-from-the-
 paper affine model (Table 1) so "what if this policy ran on nanosleep?"
 is answerable without kernel patches.
+
+The environment model (``SimRunConfig``, ``SleepModel``) and run-setup
+normalization live in ``repro.runtime.simcore``, shared with the batched
+JAX engine (``repro.runtime.batched``) — this module is the *exact,
+serial* engine of the pair: it walks the event sequence one wake at a
+time and explores one configuration per call.
 
 With ``n_queues=1`` and the default round-robin dispatcher the engine
 reduces *exactly* to the original single-queue event sequence — same
@@ -26,13 +32,18 @@ poll granularity) for information a closed form already gives.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-
 import numpy as np
 
-from .assignment import SharedAssignment
-from .dispatch import RoundRobinDispatch
 from .policy import WakeContext
+from .simcore import (
+    HR_SLEEP_MODEL,
+    NANOSLEEP_MODEL,
+    PERFECT_SLEEP_MODEL,
+    SimRunConfig,
+    SleepModel,
+    prepare_run,
+    queue_reservoirs,
+)
 from .stats import QueueStats, Reservoir, RunStats
 
 __all__ = [
@@ -43,69 +54,6 @@ __all__ = [
     "SimRunConfig",
     "simulate_run",
 ]
-
-
-@dataclass(frozen=True)
-class SleepModel:
-    """actual = target + base + slope*target + |N(0, sigma)|
-              + Exp(tail_mean) w.p. tail_prob            (us units).
-
-    Fitted to paper Table 1 (mean/p99):
-      hr_sleep :  base ~ 2.8us, slope ~ 0.027, sigma ~ 0.5   (mean +3.5..8.4)
-      nanosleep:  base ~ 57.5us, slope ~ 0.003, sigma ~ 3.0  (mean +58 flat)
-    The nanosleep arm additionally carries a heavy preemption tail —
-    without it the simulator under-loses vs the paper's Table 3 (a +58us
-    mean backlogs < 1024 descriptors; the paper still lost 3.9% at a 4096
-    ring, implying rare multi-hundred-us pile-ups).  Tail parameters chosen
-    so the q=1024..4096 loss ladder brackets the paper's.
-    """
-
-    base_us: float
-    slope: float
-    sigma_us: float
-    tail_prob: float = 0.0
-    tail_mean_us: float = 0.0
-
-    def sample(self, target_us: np.ndarray | float, rng: np.random.Generator):
-        t = np.asarray(target_us, dtype=np.float64)
-        noise = np.abs(rng.normal(0.0, self.sigma_us, size=t.shape))
-        out = t + self.base_us + self.slope * t + noise
-        if self.tail_prob:
-            hit = rng.random(size=t.shape) < self.tail_prob
-            out = out + hit * rng.exponential(self.tail_mean_us, size=t.shape)
-        return out
-
-
-HR_SLEEP_MODEL = SleepModel(base_us=2.8, slope=0.027, sigma_us=0.5)
-NANOSLEEP_MODEL = SleepModel(base_us=57.5, slope=0.003, sigma_us=3.0,
-                             tail_prob=0.01, tail_mean_us=400.0)
-PERFECT_SLEEP_MODEL = SleepModel(base_us=0.0, slope=0.0, sigma_us=0.0)
-
-
-@dataclass(frozen=True)
-class SimRunConfig:
-    """Environment knobs — everything that is *not* the policy or the
-    workload: service rate, queue size, timer quality, OS interference."""
-
-    duration_us: float = 1_000_000.0
-    service_rate_mpps: float = 29.76          # mu (packets / us)
-    queue_capacity: int = 1024                # Rx descriptors *per queue*
-    n_queues: int = 1                         # Rx queues (RSS rings)
-    sleep_model: SleepModel = HR_SLEEP_MODEL
-    wake_cost_us: float = 1.0                 # poll+return CPU cost per wake
-    # OS interference (paper Sec 5.6): each wake delayed by Exp(mean) w.p. q.
-    interference_prob: float = 0.0
-    interference_mean_us: float = 0.0
-    # Correlated stalls: Poisson system-wide freeze events delaying EVERY
-    # wake that falls inside them (kernel timer-wheel/preemption pile-ups).
-    # Needed for the paper's Table-3 weak queue-size dependence: backup
-    # threads absorb uncorrelated per-thread tails, so only correlated
-    # stalls overflow a 4096-descriptor ring.
-    stall_rate_per_us: float = 0.0
-    stall_mean_us: float = 0.0
-    seed: int = 0
-    timeseries_bin_us: float = 0.0            # >0: emit binned time series
-    latency_reservoir: int = 262_144
 
 
 def simulate_run(policy, workload, cfg: SimRunConfig | None = None, *,
@@ -122,22 +70,13 @@ def simulate_run(policy, workload, cfg: SimRunConfig | None = None, *,
     if getattr(policy, "spin", False):
         return _simulate_spin(policy, workload, cfg)
 
-    rng = np.random.default_rng(cfg.seed)
-    workload.reset(rng)
-    nq = max(int(cfg.n_queues), 1)
-    dispatcher = dispatcher or RoundRobinDispatch()
-    dispatcher.reset(nq, rng)
-    assignment = assignment or SharedAssignment()
-    slots = assignment.slots(policy, nq)
-    # distinct policy objects, in slot order (shared: just `policy`;
-    # dedicated: one clone per queue)
-    pols, seen = [], set()
-    for s in slots:
-        if id(s.policy) not in seen:
-            seen.add(id(s.policy))
-            pols.append(s.policy)
-    for p in pols:
-        p.reset()
+    setup = prepare_run(policy, workload, cfg, dispatcher=dispatcher,
+                        assignment=assignment)
+    rng = setup.rng
+    nq = setup.n_queues
+    dispatcher = setup.dispatcher
+    slots = setup.slots
+    pols = setup.policies
     m = len(slots)
     mu = cfg.service_rate_mpps
 
@@ -163,8 +102,10 @@ def simulate_run(policy, workload, cfg: SimRunConfig | None = None, *,
     busy_tries_q = np.zeros(nq, dtype=np.int64)
     cycles_q = np.zeros(nq, dtype=np.int64)
     vac, bus, nvs = [], [], []
-    lat = Reservoir(cfg.latency_reservoir, seed=cfg.seed)
+    # one latency reservoir per queue, decorrelated seeds (simcore)
+    lat_q = queue_reservoirs(cfg, nq)
     awake_us = 0.0
+    lat_area = 0.0           # queue-depth integral (packet*us), Little's law
 
     nbins = int(cfg.duration_us / cfg.timeseries_bin_us) if cfg.timeseries_bin_us else 0
     b_rho = np.zeros(max(nbins, 1)); b_ts = np.zeros(max(nbins, 1))
@@ -210,13 +151,14 @@ def simulate_run(policy, workload, cfg: SimRunConfig | None = None, *,
         continues the recursion, other queues just accumulate), repeat
         until empty (round-capped so saturated runs still terminate;
         leftovers stay queued and the truncation is counted)."""
-        nonlocal offered, dropped, last_advanced, truncations
+        nonlocal offered, dropped, last_advanced, truncations, lat_area
         total_t = 0.0
         served = 0.0
         cursor = t_start
         rounds = 0
         while backlog[q] >= 1.0 and rounds < 64:
             dt = backlog[q] / mu
+            b_r = float(backlog[q])
             served += float(backlog[q])
             total_t += dt
             n = workload.counts_in(cursor, cursor + dt)
@@ -239,6 +181,10 @@ def simulate_run(policy, workload, cfg: SimRunConfig | None = None, *,
                 dropped_q[q] += d
                 own = cfg.queue_capacity
             backlog[q] = float(own)
+            # Little integral, drain round r: the b_r being served decline
+            # linearly to 0 over dt while the next round's own arrivals
+            # accumulate linearly to `own`
+            lat_area += dt * (b_r + own) / 2.0
             if nbins:
                 # bin the drained queue's own busy-period arrivals too, so
                 # sum(offered_series * bin) tracks RunStats.offered
@@ -292,6 +238,9 @@ def simulate_run(policy, workload, cfg: SimRunConfig | None = None, *,
                 lock_taken = True
                 v = t_cursor - float(last_busy_end[q])
                 n_v = float(backlog[q])
+                # Little integral, vacation phase: the n_v packets found
+                # at busy start arrived ~uniformly over the vacation
+                lat_area += n_v * max(v, 0.0) / 2.0
                 b_time, srv = drain(q, t_cursor)
                 serviced += srv
                 serviced_q[q] += srv
@@ -309,7 +258,7 @@ def simulate_run(policy, workload, cfg: SimRunConfig | None = None, *,
                     k = min(int(n_v), 8)
                     arr = rng.uniform(0.0, max(v, 1e-9), size=k)      # age
                     pos = np.sort(rng.uniform(0.0, n_v, size=k)) / mu
-                    lat.extend((max(v, 1e-9) - arr + pos).tolist())
+                    lat_q[q].extend((max(v, 1e-9) - arr + pos).tolist())
 
                 pol.on_cycle_end(b_time, max(v, 1e-9))
                 t_cursor = float(busy_until[q])
@@ -348,6 +297,13 @@ def simulate_run(policy, workload, cfg: SimRunConfig | None = None, *,
 
     cnt = np.maximum(b_cnt, 1)
     nbins_eff = max(nbins, 1)
+    # run-level latency = weighted union of the per-queue reservoirs
+    # (a fresh object even for one queue: RunStats.merge pools the
+    # run-level and per-queue reservoirs independently, so they must
+    # never alias)
+    lat = Reservoir(cfg.latency_reservoir, seed=cfg.seed)
+    for r in lat_q:
+        lat.merge(r)
     return RunStats(
         backend="sim",
         policy=getattr(policy, "name", type(policy).__name__),
@@ -357,12 +313,14 @@ def simulate_run(policy, workload, cfg: SimRunConfig | None = None, *,
         awake_ns=int(awake_us * 1e3), started_ns=0,
         stopped_ns=int(cfg.duration_us * 1e3),
         latency_us=lat,
+        latency_area_us=lat_area,
         per_queue=[QueueStats(queue=q,
                               offered=int(offered_q[q]),
                               dropped=int(dropped_q[q]),
                               serviced=int(serviced_q[q]),
                               busy_tries=int(busy_tries_q[q]),
-                              cycles=int(cycles_q[q]))
+                              cycles=int(cycles_q[q]),
+                              latency_us=lat_q[q])
                    for q in range(nq)],
         drain_truncations=truncations,
         vacations_us=np.asarray(vac),
@@ -418,6 +376,7 @@ def _simulate_spin(policy, workload, cfg: SimRunConfig) -> RunStats:
         started_ns=0,
         stopped_ns=int(cfg.duration_us * 1e3),
         latency_us=Reservoir(4, seed=cfg.seed),
+        latency_area_us=lat_num + serviced / cfg.service_rate_mpps,
         latency_override={
             "mean": float(mean_lat + 1.0 / cfg.service_rate_mpps),
             "p99": float(mean_lat * 3 + 1.0 / cfg.service_rate_mpps),

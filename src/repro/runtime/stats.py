@@ -15,6 +15,7 @@ value seen has equal probability of being in the sample).
 
 from __future__ import annotations
 
+import copy
 import random
 import warnings
 from dataclasses import dataclass, field
@@ -77,6 +78,43 @@ class Reservoir:
         for j, v in zip(js[hit].tolist(), arr[hit].tolist()):
             self._buf[j] = v            # in order: later values win ties
 
+    def merge(self, other: "Reservoir") -> "Reservoir":
+        """Weighted Algorithm-R union: after merging, the sample behaves
+        as if the two underlying streams had been fed into one reservoir
+        of ``self.capacity`` — each of the ``self.count + other.count``
+        values seen by either side is (approximately) equally likely to
+        be in the merged buffer.  In place; returns ``self``.
+
+        While both sides are still lossless (nothing evicted yet) the
+        union is an exact concatenation.  Otherwise the merged buffer
+        draws each slot from ``self`` with probability proportional to
+        ``self.count`` (binomial split, sampled without replacement
+        within each side) — the standard reservoir-union construction
+        used to combine per-shard samples.
+        """
+        if other.count == 0:
+            return self
+        total = self.count + other.count
+        lossless = (self.count == len(self._buf)
+                    and other.count == len(other._buf))
+        if lossless and total <= self.capacity:
+            self._buf.extend(other._buf)
+            self.count = total
+            return self
+        k = min(self.capacity, len(self._buf) + len(other._buf))
+        n_self = int(self._np_rng.binomial(k, self.count / total))
+        n_self = min(n_self, len(self._buf))
+        n_other = min(k - n_self, len(other._buf))
+        n_self = min(k - n_other, len(self._buf))   # top up if other clipped
+        pick_s = self._np_rng.choice(len(self._buf), size=n_self,
+                                     replace=False)
+        pick_o = self._np_rng.choice(len(other._buf), size=n_other,
+                                     replace=False)
+        self._buf = ([self._buf[i] for i in pick_s]
+                     + [float(other._buf[i]) for i in pick_o])
+        self.count = total
+        return self
+
     def __len__(self) -> int:
         return len(self._buf)
 
@@ -113,10 +151,24 @@ class QueueStats:
     serviced: int = 0
     busy_tries: int = 0
     cycles: int = 0
+    # per-queue retrieval-latency sample (populated by the event
+    # simulator; None where the backend doesn't break latency down)
+    latency_us: Reservoir | None = None
 
     @property
     def loss_fraction(self) -> float:
         return self.dropped / max(self.offered, 1)
+
+    def merge(self, other: "QueueStats") -> "QueueStats":
+        """Combine with the same queue's slice from a parallel shard."""
+        self.offered += other.offered
+        self.dropped += other.dropped
+        self.serviced += other.serviced
+        self.busy_tries += other.busy_tries
+        self.cycles += other.cycles
+        if self.latency_us is not None and other.latency_us is not None:
+            self.latency_us.merge(other.latency_us)
+        return self
 
 
 @dataclass
@@ -151,6 +203,13 @@ class RunStats:
     # analytic backends (the busy-poll fluid model) report closed-form
     # latency summaries instead of samples
     latency_override: dict | None = None
+    # exact queue-depth integral (packet*us): simulation engines set this
+    # so Little's law recovers the true all-packet mean sojourn —
+    # ``mean_latency_us`` from samples is the *vacation-found-packet*
+    # estimator (per-cycle weighted), which reads systematically higher
+    # by roughly (1+rho) at load; use ``mean_sojourn_us`` to compare
+    # engines or backends on the same quantity
+    latency_area_us: float = 0.0
     # real-time replay only: worst lateness of the arrival generator vs
     # the workload's schedule.  >> mean inter-arrival gap means the host
     # could not source the workload and the run is NOT sim-comparable.
@@ -226,6 +285,15 @@ class RunStats:
         return float(np.max(np.asarray(self.latency_us))) if self.latency_us else 0.0
 
     @property
+    def mean_sojourn_us(self) -> float:
+        """All-packet mean time in system via Little's law (area under
+        the queue-depth curve over packets served); falls back to the
+        sampled mean where the backend keeps no depth integral."""
+        if self.latency_area_us > 0.0:
+            return self.latency_area_us / max(self.items, 1)
+        return self.mean_latency_us
+
+    @property
     def mean_vacation_us(self) -> float:
         return float(np.mean(self.vacations_us)) if self.vacations_us.size else 0.0
 
@@ -236,6 +304,79 @@ class RunStats:
     @property
     def mean_nv(self) -> float:
         return float(np.mean(self.n_v)) if self.n_v.size else 0.0
+
+    def merge(self, other: "RunStats") -> "RunStats":
+        """Combine two runs that shard one logical experiment — parallel
+        queue shards, seed replicas of the same simulated window, or
+        per-worker slices of a batched sweep.  Counters add, latency
+        reservoirs take their weighted Algorithm-R union, per-queue
+        slices merge by queue index, and the wall window becomes the
+        union ``[min(started), max(stopped)]`` (so ``cpu_fraction`` of
+        equal-window shards is the summed awake time over that one
+        window, i.e. total cores burned).  In place; returns ``self``.
+
+        Cycle-sample arrays concatenate; binned time series merge only
+        when both sides share the same bin grid (rates add, rho/T_S
+        average) and are dropped otherwise.
+        """
+        for f in ("wakeups", "cycles", "busy_tries", "items", "offered",
+                  "dropped", "awake_ns", "drain_truncations",
+                  "latency_area_us"):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        self.started_ns = min(self.started_ns, other.started_ns)
+        self.stopped_ns = max(self.stopped_ns, other.stopped_ns)
+        for f in ("backend", "policy", "workload"):
+            if getattr(self, f) != getattr(other, f):
+                setattr(self, f, "mixed")
+        # latency: sample-based sides merge reservoirs; analytic
+        # overrides combine as an items-weighted mean (p99/worst upper
+        # bounds) since there are no samples to re-pool.
+        if self.latency_override or other.latency_override:
+            mine = self.latency_override or {
+                "mean": self.mean_latency_us, "p99": self.p99_latency_us,
+                "worst": self.worst_latency_us}
+            theirs = other.latency_override or {
+                "mean": other.mean_latency_us, "p99": other.p99_latency_us,
+                "worst": other.worst_latency_us}
+            # items was already summed above; recover the pre-merge split
+            w_a, w_b = self.items - other.items, other.items
+            tot = max(w_a + w_b, 1)
+            self.latency_override = {
+                "mean": (mine["mean"] * w_a + theirs["mean"] * w_b) / tot,
+                "p99": max(mine["p99"], theirs["p99"]),
+                "worst": max(mine["worst"], theirs["worst"]),
+            }
+        else:
+            self.latency_us.merge(other.latency_us)
+        self.feeder_lag_us = max(self.feeder_lag_us, other.feeder_lag_us)
+        # adopt copies of the donor's per-queue slices — aliasing them
+        # would let a later merge mutate `other` retroactively
+        if self.per_queue and other.per_queue:
+            by_q = {q.queue: q for q in self.per_queue}
+            for oq in other.per_queue:
+                if oq.queue in by_q:
+                    by_q[oq.queue].merge(oq)
+                else:
+                    self.per_queue.append(copy.deepcopy(oq))
+            self.per_queue.sort(key=lambda q: q.queue)
+        elif other.per_queue:
+            self.per_queue = copy.deepcopy(other.per_queue)
+        for f in ("vacations_us", "busies_us", "n_v"):
+            setattr(self, f, np.concatenate([getattr(self, f),
+                                             getattr(other, f)]))
+        same_grid = (self.series_t_us.size
+                     and self.series_t_us.shape == other.series_t_us.shape
+                     and np.array_equal(self.series_t_us, other.series_t_us))
+        if same_grid:
+            for f in ("tput_series_mpps", "offered_series_mpps"):
+                setattr(self, f, getattr(self, f) + getattr(other, f))
+            for f in ("rho_series", "ts_series"):
+                setattr(self, f, (getattr(self, f) + getattr(other, f)) / 2)
+        else:
+            for f in ("rho_series", "ts_series", "tput_series_mpps",
+                      "offered_series_mpps", "series_t_us"):
+                setattr(self, f, _empty())
+        return self
 
     def summary(self) -> dict:
         """Flat dict of the headline numbers (benchmark CSV rows, logs)."""
@@ -253,6 +394,7 @@ class RunStats:
             "dropped": self.dropped, "loss_fraction": self.loss_fraction,
             "cpu_fraction": self.cpu_fraction,
             "mean_latency_us": self.mean_latency_us,
+            "mean_sojourn_us": self.mean_sojourn_us,
             "p99_latency_us": self.p99_latency_us,
             "n_queues": max(len(self.per_queue), 1),
             "drain_truncations": self.drain_truncations,

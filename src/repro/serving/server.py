@@ -66,9 +66,27 @@ class Server:
 
     def __init__(self, engine: InferenceEngine, policy, *,
                  queue_capacity: int = 1024, sleep_fn=hr_sleep,
-                 n_queues: int = 1, dispatcher=None, assignment=None):
+                 n_queues: int = 1, dispatcher=None, assignment=None,
+                 operating_table=None):
         self.engine = engine
         self.policy = policy
+        # calibrated operating table (repro.runtime.calibrate): accept a
+        # ready table or a path to one saved by build_operating_table,
+        # and install it as the policy controller's feed-forward term so
+        # the server starts at pre-validated operating points
+        if isinstance(operating_table, (str, bytes)) or hasattr(
+                operating_table, "__fspath__"):
+            from repro.runtime.calibrate import OperatingTable
+            operating_table = OperatingTable.load(operating_table)
+        self.operating_table = operating_table
+        if operating_table is not None:
+            ctl = getattr(policy, "controller", None)
+            if ctl is None:
+                raise ValueError(
+                    f"policy {getattr(policy, 'name', policy)!r} has no "
+                    "controller to install the operating table into")
+            ctl.feedforward = operating_table
+            ctl.__post_init__()        # re-derive T_S/T_L from the table
         self.queues = [BoundedQueue(queue_capacity)
                        for _ in range(max(n_queues, 1))]
         self.queue = self.queues[0]        # single-queue back-compat alias

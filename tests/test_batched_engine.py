@@ -1,0 +1,185 @@
+"""Batched JAX engine: parity vs the exact event engine, closed-form
+cross-validation, and one-call sweep scale (the acceptance criteria of
+the batched-backend refactor)."""
+
+import numpy as np
+import pytest
+
+from repro.core import MetronomeConfig
+from repro.core import analytics as an
+from repro.runtime import (
+    MetronomePolicy,
+    PoissonWorkload,
+    SimRunConfig,
+    SweepGrid,
+    simulate_batch,
+    simulate_run,
+)
+from repro.runtime.simcore import HR_SLEEP_MODEL, PERFECT_SLEEP_MODEL
+
+# Documented parity tolerance (see repro/runtime/batched.py docstring):
+# stable region, n_queues=1 —
+#   mean sojourn within max(1.5us, 12%), cpu within 0.02 + 5%.
+LAT_ABS_US, LAT_REL = 1.5, 0.12
+CPU_ABS, CPU_REL = 0.02, 0.05
+
+
+def _random_configs(n=24, seed=42):
+    rng = np.random.default_rng(seed)
+    pts = []
+    for i in range(n):
+        t_s = float(rng.uniform(5.0, 40.0))
+        pts.append(dict(
+            t_s_us=t_s,
+            t_l_us=float(t_s * rng.uniform(4.0, 25.0)),
+            m=int(rng.integers(1, 5)),
+            rate_mpps=float(rng.uniform(0.15, 0.85) * 29.76),
+            seed=i))
+    return pts
+
+
+@pytest.mark.slow
+def test_parity_with_event_engine_24_random_configs():
+    """>= 20 randomly drawn static configs: batched mean sojourn and CPU
+    fraction agree with simulate_run within the documented tolerance."""
+    pts = _random_configs()
+    cfg = SimRunConfig(duration_us=120_000.0, sleep_model=HR_SLEEP_MODEL)
+    bs = simulate_batch(SweepGrid.of_points(pts), cfg, slot_us=0.5)
+    for i, p in enumerate(pts):
+        policy = MetronomePolicy(
+            MetronomeConfig(m=p["m"], v_target_us=p["t_s_us"],
+                            t_long_us=p["t_l_us"],
+                            ts_min_us=min(1.0, p["t_s_us"])),
+            adaptive=False)
+        rs = simulate_run(policy, PoissonWorkload(p["rate_mpps"]), cfg)
+        lat_b, lat_e = float(bs.mean_latency_us[i]), rs.mean_sojourn_us
+        cpu_b, cpu_e = float(bs.cpu_fraction[i]), rs.cpu_fraction
+        assert abs(lat_b - lat_e) <= max(LAT_ABS_US, LAT_REL * lat_e), \
+            (p, lat_b, lat_e)
+        assert abs(cpu_b - cpu_e) <= CPU_ABS + CPU_REL * cpu_e, \
+            (p, cpu_b, cpu_e)
+        # secondary accounting parity: wakeups within 15%, loss both ~0
+        assert bs.wakeups[i] == pytest.approx(rs.wakeups, rel=0.15)
+        assert float(bs.loss_fraction[i]) < 1e-3
+        assert rs.loss_fraction < 1e-3
+
+
+def test_thousand_point_sweep_is_one_compiled_call():
+    """A >= 1000-point grid runs through a single jit-compiled function
+    (one compilation, one vmapped call) and returns finite, load-ordered
+    metrics."""
+    from repro.runtime.batched import _compiled_sweep
+
+    grid = SweepGrid.product(
+        t_s_us=np.linspace(4.0, 40.0, 8),
+        t_l_us=[150.0, 500.0],
+        m=[2, 3, 4],
+        rate_mpps=np.linspace(2.0, 25.0, 9),
+        seeds=(0, 1, 2))
+    assert len(grid) >= 1000
+    before = _compiled_sweep.cache_info()
+    bs = simulate_batch(grid, SimRunConfig(duration_us=10_000.0),
+                        slot_us=1.0)
+    after = _compiled_sweep.cache_info()
+    # at most one new compilation for the whole batch — the sweep is one
+    # call, not a per-point loop
+    assert after.misses <= before.misses + 1
+    assert len(bs) == len(grid)
+    for name in ("mean_latency_us", "cpu_fraction", "loss_fraction",
+                 "mean_vacation_us", "wakeups"):
+        assert np.isfinite(getattr(bs, name)).all(), name
+    # CPU grows with offered load on average (marginalize everything else)
+    cpu = bs.reshaped("cpu_fraction").mean(axis=(0, 1, 2, 3, 5))
+    assert np.all(np.diff(cpu) > 0)
+    # and with more threads at fixed everything else
+    cpu_m = bs.reshaped("cpu_fraction").mean(axis=(0, 1, 3, 4, 5))
+    assert cpu_m[-1] > cpu_m[0]
+
+
+def test_batched_latency_matches_closed_form_in_stable_region():
+    """Satellite property: batched mean latency within tolerance of the
+    E[V^2]/(2 E[V]) closed form (high-load regime, perfect timers)."""
+    pts = []
+    for t_s in (10.0, 20.0, 40.0):
+        for m in (1, 2, 3):
+            pts.append(dict(t_s_us=t_s, t_l_us=20.0 * t_s, m=m,
+                            rate_mpps=0.5 * 29.76, seed=7))
+    cfg = SimRunConfig(duration_us=100_000.0,
+                       sleep_model=PERFECT_SLEEP_MODEL)
+    bs = simulate_batch(SweepGrid.of_points(pts), cfg, slot_us=0.5)
+    for i, p in enumerate(pts):
+        pred = float(an.mean_sojourn_high(p["t_s_us"], p["t_l_us"], p["m"]))
+        got = float(bs.mean_latency_us[i])
+        assert got == pytest.approx(pred, rel=0.25), (p, got, pred)
+
+
+def test_batched_mean_vacation_tracks_eq6():
+    """High load, T_L >> T_S: measured mean vacation ~= Eq (6)."""
+    pts = [dict(t_s_us=10.0, t_l_us=500.0, m=m, rate_mpps=14.88, seed=3)
+           for m in (1, 2, 3, 4)]
+    cfg = SimRunConfig(duration_us=100_000.0,
+                       sleep_model=PERFECT_SLEEP_MODEL)
+    bs = simulate_batch(SweepGrid.of_points(pts), cfg, slot_us=0.5)
+    for i, p in enumerate(pts):
+        pred = float(an.mean_vacation_high(10.0, 500.0, p["m"]))
+        assert float(bs.mean_vacation_us[i]) == pytest.approx(pred,
+                                                              rel=0.15)
+
+
+def test_multi_queue_batched_accounting():
+    """n_queues > 1: offered tracks the rate, nothing is lost at light
+    load, and CPU stays below one thread-count's worth."""
+    grid = SweepGrid.of_points([
+        dict(t_s_us=15.0, t_l_us=300.0, m=4, n_queues=4,
+             rate_mpps=10.0, seed=0)])
+    cfg = SimRunConfig(duration_us=50_000.0)
+    bs = simulate_batch(grid, cfg, slot_us=0.5)
+    assert bs.offered[0] == pytest.approx(10.0 * 50_000.0, rel=0.05)
+    assert float(bs.loss_fraction[0]) < 1e-3
+    assert 0.0 < float(bs.cpu_fraction[0]) < 4.0
+    assert float(bs.serviced[0]) <= bs.offered[0]
+
+
+def test_to_run_stats_conversion():
+    grid = SweepGrid.of_points([
+        dict(t_s_us=10.0, t_l_us=500.0, m=3, rate_mpps=14.88, seed=0)])
+    cfg = SimRunConfig(duration_us=30_000.0)
+    bs = simulate_batch(grid, cfg, slot_us=0.5)
+    rs = bs.to_run_stats(0)
+    assert rs.backend == "batched"
+    assert rs.items == int(bs.serviced[0])
+    assert rs.cpu_fraction == pytest.approx(float(bs.cpu_fraction[0]),
+                                            rel=1e-3)
+    assert rs.mean_latency_us == pytest.approx(
+        float(bs.mean_latency_us[0]), rel=1e-6)
+    assert rs.mean_sojourn_us == pytest.approx(
+        float(bs.mean_latency_us[0]), rel=1e-3)
+    s = rs.summary()
+    assert s["backend"] == "batched"
+    assert s["cpu_fraction"] == pytest.approx(rs.cpu_fraction)
+
+
+def test_batched_rejects_event_engine_only_features():
+    grid = SweepGrid.of_points([dict(t_s_us=10.0, t_l_us=100.0, m=2,
+                                     rate_mpps=1.0, seed=0)])
+    with pytest.raises(ValueError, match="interference"):
+        simulate_batch(grid, SimRunConfig(duration_us=1_000.0,
+                                          interference_prob=0.1,
+                                          interference_mean_us=10.0))
+    with pytest.raises(ValueError, match="timeseries"):
+        simulate_batch(grid, SimRunConfig(duration_us=1_000.0,
+                                          timeseries_bin_us=100.0))
+
+
+def test_sweep_grid_product_shape_and_point():
+    grid = SweepGrid.product(t_s_us=[5.0, 10.0], t_l_us=[100.0],
+                             m=[2, 3], rate_mpps=[1.0, 2.0, 3.0],
+                             seeds=(0, 1))
+    assert len(grid) == 2 * 1 * 2 * 1 * 3 * 2
+    assert grid.shape == (2, 1, 2, 1, 3, 2)
+    p = grid.point(0)
+    assert set(p) == set(grid.dims)
+    # reshaped round-trips the cartesian structure
+    cfg = SimRunConfig(duration_us=2_000.0)
+    bs = simulate_batch(grid, cfg, slot_us=1.0)
+    assert bs.reshaped("cpu_fraction").shape == grid.shape

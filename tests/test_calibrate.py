@@ -1,0 +1,194 @@
+"""Calibration layer: operating-table construction, persistence,
+controller feed-forward, serving integration, and the calibrated-vs-
+fixed-baseline acceptance verdict."""
+
+import numpy as np
+import pytest
+
+from repro.core import MetronomeConfig, MetronomeController
+from repro.runtime import (
+    MetronomePolicy,
+    OperatingPoint,
+    OperatingTable,
+    SimRunConfig,
+    build_operating_table,
+)
+
+
+def _tiny_table(**kw):
+    args = dict(
+        rhos=[0.15, 0.4, 0.65],
+        target_mean_latency_us=15.0,
+        t_s_grid=np.linspace(4.0, 48.0, 6),
+        t_l_grid=[150.0, 500.0],
+        m_grid=(2, 3),
+        cfg=SimRunConfig(duration_us=30_000.0),
+        seeds=(0,),
+        slot_us=1.0,
+    )
+    args.update(kw)
+    return build_operating_table(**args)
+
+
+@pytest.fixture(scope="module")
+def table():
+    return _tiny_table()
+
+
+def test_build_meets_target_and_scales_cpu_with_load(table):
+    assert all(p.meets_target for p in table.points)
+    assert all(p.mean_latency_us <= table.target_mean_latency_us
+               for p in table.points)
+    assert all(p.loss_fraction <= 1e-3 for p in table.points)
+    cpus = [p.cpu_fraction for p in table.points]
+    assert cpus == sorted(cpus)                  # more load, more CPU
+    assert cpus[-1] < 1.0                        # still beats busy-poll
+
+
+def test_spot_check_against_event_engine_passes():
+    # same tiny grid, now cross-examined by the exact engine
+    _tiny_table(spot_check=2)
+
+
+def test_lookup_is_conservative_and_interp_clamps(table):
+    lo, hi = table.points[0], table.points[-1]
+    # below the ladder: governed by the lowest calibrated load
+    assert table.lookup(0.0) == lo
+    # between rungs: governed by the next rung UP (conservative)
+    mid_rho = (table.points[0].rho + table.points[1].rho) / 2
+    assert table.lookup(mid_rho) == table.points[1]
+    # above the ladder: clamped to the top rung
+    assert table.lookup(0.99) == hi
+    # interpolation clamps outside the calibrated range
+    assert table.timeouts_us(0.0) == (lo.t_s_us, lo.t_l_us)
+    assert table.timeouts_us(1.0) == (hi.t_s_us, hi.t_l_us)
+    t_s_mid, _ = table.timeouts_us(mid_rho)
+    assert (min(lo.t_s_us, table.points[1].t_s_us) <= t_s_mid
+            <= max(lo.t_s_us, table.points[1].t_s_us))
+
+
+def test_json_roundtrip_and_save_load(table, tmp_path):
+    assert OperatingTable.from_json(table.to_json()) == table
+    path = tmp_path / "op_table.json"
+    table.save(path)
+    assert OperatingTable.load(path) == table
+
+
+def test_points_sorted_and_validated():
+    pts = (OperatingPoint(rho=0.7, t_s_us=10.0, t_l_us=500.0, m=3,
+                          mean_latency_us=8.0, cpu_fraction=0.7,
+                          loss_fraction=0.0),
+           OperatingPoint(rho=0.2, t_s_us=40.0, t_l_us=500.0, m=2,
+                          mean_latency_us=14.0, cpu_fraction=0.2,
+                          loss_fraction=0.0))
+    t = OperatingTable(target_mean_latency_us=15.0, service_rate_mpps=29.76,
+                       points=pts)
+    assert [p.rho for p in t.points] == [0.2, 0.7]
+    with pytest.raises(ValueError):
+        OperatingTable(target_mean_latency_us=15.0,
+                       service_rate_mpps=29.76, points=())
+
+
+# ---------------------------------------------------------------------------
+# controller / policy / server integration
+# ---------------------------------------------------------------------------
+
+def _hand_table():
+    return OperatingTable(
+        target_mean_latency_us=15.0, service_rate_mpps=29.76,
+        points=(
+            OperatingPoint(rho=0.1, t_s_us=60.0, t_l_us=800.0, m=2,
+                           mean_latency_us=12.0, cpu_fraction=0.1,
+                           loss_fraction=0.0),
+            OperatingPoint(rho=0.9, t_s_us=10.0, t_l_us=400.0, m=3,
+                           mean_latency_us=9.0, cpu_fraction=0.9,
+                           loss_fraction=0.0),
+        ))
+
+
+def test_controller_feedforward_follows_table():
+    tbl = _hand_table()
+    cfg = MetronomeConfig(m=3, v_target_us=10.0, t_long_us=500.0)
+    ctl = MetronomeController(cfg, feedforward=tbl)
+    # init at rho_init=0.5: the table's interpolated surface, not Eq 12
+    ts_ff, tl_ff = tbl.timeouts_us(cfg.rho_init)
+    assert ctl.t_short_us == pytest.approx(ts_ff)
+    assert ctl.t_long_us == pytest.approx(tl_ff)
+    # drive rho high: T_S slides toward the high-load rung
+    for _ in range(200):
+        ctl.on_cycle_end(busy_us=40.0, vacation_us=10.0)
+    assert ctl.rho > 0.75
+    ts_hi, tl_hi = tbl.timeouts_us(ctl.rho)
+    assert ctl.t_short_us == pytest.approx(ts_hi)
+    assert ctl.timeout_us(primary=False) == pytest.approx(tl_hi)
+    # feed-forward beats the Eq-12 upper clamp at low load: the 60us
+    # low-load rung survives even though resolved_ts_max() is 30us
+    ctl2 = MetronomeController(cfg, feedforward=tbl)
+    for _ in range(200):
+        ctl2.on_cycle_end(busy_us=0.5, vacation_us=60.0)
+    assert ctl2.t_short_us > cfg.resolved_ts_max()
+
+
+def test_feedforward_weight_blends_back_to_eq12():
+    tbl = _hand_table()
+    cfg0 = MetronomeConfig(m=3, v_target_us=10.0, feedforward_weight=0.0)
+    ctl = MetronomeController(cfg0, feedforward=tbl)
+    plain = MetronomeController(MetronomeConfig(m=3, v_target_us=10.0))
+    for c in (ctl, plain):
+        c.on_cycle_end(busy_us=20.0, vacation_us=10.0)
+    assert ctl.t_short_us == pytest.approx(plain.t_short_us)
+    assert ctl.t_long_us == pytest.approx(cfg0.t_long_us)
+
+
+def test_policy_carries_table_across_resets():
+    tbl = _hand_table()
+    pol = MetronomePolicy(MetronomeConfig(m=3, v_target_us=10.0),
+                          operating_table=tbl)
+    pol.reset()
+    assert pol.controller.feedforward is tbl
+    ts_ff, _ = tbl.timeouts_us(pol.controller.rho)
+    assert pol.t_short_us == pytest.approx(ts_ff)
+
+
+def test_server_loads_operating_table_at_startup(tmp_path):
+    from repro.serving import Server
+
+    class _NullEngine:
+        def submit(self, reqs):
+            pass
+
+        def pump(self):
+            return False
+
+    tbl = _hand_table()
+    path = tmp_path / "table.json"
+    tbl.save(path)
+    pol = MetronomePolicy(MetronomeConfig(m=2, v_target_us=2_000.0,
+                                          t_long_us=50_000.0))
+    srv = Server(_NullEngine(), pol, operating_table=str(path))
+    assert srv.operating_table == tbl
+    assert pol.controller.feedforward == tbl
+    ts_ff, _ = tbl.timeouts_us(pol.controller.rho)
+    assert pol.controller.t_short_us == pytest.approx(ts_ff)
+    # policies without a controller cannot take a table
+    from repro.runtime import FixedPeriodPolicy
+    with pytest.raises(ValueError, match="no .*controller"):
+        Server(_NullEngine(), FixedPeriodPolicy(50.0), operating_table=tbl)
+
+
+# ---------------------------------------------------------------------------
+# acceptance verdict: calibrated beats (<=) the fixed-t_s baseline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_sweep_frontier_verdict_calibrated_beats_fixed():
+    """The benchmark's verdict row: per load, the calibrated table meets
+    the latency target at CPU <= the best fixed configuration."""
+    from benchmarks.sweep_frontier import sweep_frontier
+
+    rows = {name: (val, derived)
+            for name, val, derived in sweep_frontier(quick=True)}
+    ok, derived = rows["verdict/ok"]
+    assert ok == 1.0, rows.get("verdict/calibrated_vs_fixed_ts")
+    _, vd = rows["verdict/calibrated_vs_fixed_ts"]
+    assert "calibrated_leq_fixed_at_every_load=True" in vd

@@ -137,3 +137,75 @@ def test_ewma_converges_to_true_load():
     for _ in range(300):
         rho = float(an.ewma_rho(rho, b=30.0, v=10.0, alpha=0.125))
     assert rho == pytest.approx(0.75, abs=1e-6)   # B/(V+B) = 30/40
+
+
+# ---------------------------------------------------------------------------
+# calibration-layer properties (batched-sweep cross-validation surface)
+# ---------------------------------------------------------------------------
+
+@given(v=ts_st, m=m_st,
+       ts_min=st.floats(min_value=0.0, max_value=5.0, **finite),
+       span=st.floats(min_value=1.0, max_value=500.0, **finite))
+@settings(max_examples=200, deadline=None)
+def test_adaptive_ts_monotone_in_rho_and_clamped(v, m, ts_min, span):
+    """Eq (12) is nonincreasing in rho and always lands inside the
+    [ts_min, ts_max] clamp band — for ANY band, including ones tighter
+    than the unclamped range."""
+    ts_max = ts_min + span
+    rhos = np.linspace(0.0, 1.0, 65)
+    ts = an.adaptive_ts(v, rhos, m, ts_min=ts_min, ts_max=ts_max)
+    assert np.all(np.diff(ts) <= 1e-9)
+    assert np.all(ts >= ts_min - 1e-12)
+    assert np.all(ts <= ts_max + 1e-12)
+
+
+def test_adaptive_ts_vectorizes_over_m():
+    """Array-valued M (the batched sweep axis) must agree with the
+    scalar geometric-series evaluation elementwise."""
+    ms = np.array([1, 2, 3, 5, 8])
+    rho = 0.62
+    vec = an.adaptive_ts(10.0, rho, ms, ts_min=0.0)
+    for i, m in enumerate(ms):
+        scalar = m * 10.0 / sum(rho**k for k in range(int(m)))
+        assert vec[i] == pytest.approx(scalar, rel=1e-12)
+    # broadcasting rho x m grids (the calibration lattice shape)
+    grid = an.adaptive_ts(10.0, np.linspace(0, 1, 7)[:, None],
+                          ms[None, :], ts_min=0.0)
+    assert grid.shape == (7, 5)
+
+
+@given(ts=ts_st, ratio=ratio_st, m=m_st)
+@settings(max_examples=100, deadline=None)
+def test_general_form_exact_at_endpoints(ts, ratio, m):
+    """p=0 (pure high load) and p=1 (pure low load) are *exact* — not
+    just limiting — evaluations of the App C form."""
+    tl = ts * ratio
+    assert an.mean_vacation_general(ts, tl, m, p=0.0) == pytest.approx(
+        an.mean_vacation_high(ts, tl, m), rel=1e-12)
+    assert an.mean_vacation_general(ts, tl, m, p=1.0) == pytest.approx(
+        an.mean_vacation_low(ts, m), rel=1e-12)
+
+
+@given(ts=ts_st, ratio=ratio_st, m=m_st)
+@settings(max_examples=100, deadline=None)
+def test_second_moment_vacation_matches_integral(ts, ratio, m):
+    """E[V^2] closed form == 2 int x (1 - F(x)) dx for Eq (5)'s V."""
+    tl = ts * ratio
+    xs = np.linspace(0, ts, 20001)
+    surv = (1.0 - np.clip(xs / tl, 0.0, 1.0)) ** (m - 1)
+    numeric = np.trapezoid(2.0 * xs * surv, xs)
+    assert an.second_moment_vacation_high(ts, tl, m) == pytest.approx(
+        numeric, rel=1e-3)
+
+
+@given(ts=ts_st, ratio=ratio_st, m=m_st)
+@settings(max_examples=100, deadline=None)
+def test_mean_sojourn_high_bounds(ts, ratio, m):
+    """E[V^2]/(2E[V]) lies in [E[V]/2, T_S/2]: Jensen from below, the
+    V <= T_S support bound from above (equality when V is
+    deterministic, i.e. M=1)."""
+    tl = ts * ratio
+    w = float(an.mean_sojourn_high(ts, tl, m))
+    ev = float(an.mean_vacation_high(ts, tl, m))
+    assert ev / 2 - 1e-9 <= w <= ts / 2 + 1e-9
+    assert float(an.mean_sojourn_high(ts, tl, 1)) == pytest.approx(ts / 2)

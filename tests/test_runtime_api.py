@@ -25,6 +25,7 @@ from repro.runtime import (
     Reservoir,
     RetrievalPolicy,
     RoundRobinDispatch,
+    RunStats,
     Runtime,
     SharedAssignment,
     SimRunConfig,
@@ -536,6 +537,123 @@ def test_reservoir_vectorized_extend_matches_algorithm_r():
     r2.extend([])
     r2.extend(np.empty(0))
     assert r2.count == 300
+
+
+def test_reservoir_merge_lossless_then_weighted():
+    """merge() is exact concatenation while both sides are lossless and
+    a count-weighted union (still bounded, still uniform-ish) after."""
+    a = Reservoir(capacity=100, seed=0)
+    b = Reservoir(capacity=100, seed=1)
+    a.extend([1.0, 2.0, 3.0])
+    b.extend([4.0, 5.0])
+    a.merge(b)
+    assert sorted(a) == [1.0, 2.0, 3.0, 4.0, 5.0]
+    assert a.count == 5
+    # weighted regime: one side saw 9x the data; the merged sample's
+    # composition must reflect the 9:1 stream weights, not the 1:1
+    # buffer sizes
+    big = Reservoir(capacity=500, seed=2)
+    small = Reservoir(capacity=500, seed=3)
+    big.extend(np.zeros(45_000))
+    small.extend(np.ones(5_000))
+    big.merge(small)
+    assert len(big) == 500
+    assert big.count == 50_000
+    ones = float(np.sum(np.asarray(big)))
+    assert 20 <= ones <= 90                       # ~10% +- sampling noise
+    # merging an empty reservoir is a no-op
+    before = list(big)
+    big.merge(Reservoir(capacity=10, seed=4))
+    assert list(big) == before
+
+
+def test_run_stats_merge_combines_shards():
+    """Two equal-window sim shards merge into one run: counters add,
+    per-queue slices add by index, reservoirs pool, and cpu_fraction
+    becomes total cores burned over the shared window."""
+    def run(seed):
+        return simulate_run(
+            MetronomePolicy(MetronomeConfig(m=3, v_target_us=10.0,
+                                            t_long_us=500.0)),
+            PoissonWorkload(10.0),
+            SimRunConfig(duration_us=30_000.0, seed=seed, n_queues=2))
+
+    a, b, fresh_a = run(1), run(2), run(1)
+    merged = a.merge(b)
+    assert merged is a
+    for f in ("wakeups", "cycles", "busy_tries", "items", "offered",
+              "dropped", "awake_ns"):
+        assert getattr(merged, f) == getattr(fresh_a, f) + getattr(b, f), f
+    assert merged.duration_ns == fresh_a.duration_ns      # same window
+    assert merged.cpu_fraction == pytest.approx(
+        fresh_a.cpu_fraction + b.cpu_fraction, rel=1e-9)
+    _assert_per_queue_conserves(merged, 2)
+    assert merged.latency_us.count == (fresh_a.latency_us.count
+                                       + b.latency_us.count)
+    lo = min(fresh_a.mean_latency_us, b.mean_latency_us)
+    hi = max(fresh_a.mean_latency_us, b.mean_latency_us)
+    assert lo - 1e-9 <= merged.mean_latency_us <= hi + 1e-9
+    # Little-law integrals add too
+    assert merged.latency_area_us == pytest.approx(
+        fresh_a.latency_area_us + b.latency_area_us)
+    assert merged.vacations_us.size == (fresh_a.vacations_us.size
+                                        + b.vacations_us.size)
+    # same-policy labels survive; mixed ones collapse
+    assert merged.policy == fresh_a.policy
+    c = run(3)
+    c.policy = "other"
+    merged.merge(c)
+    assert merged.policy == "mixed"
+
+
+def test_run_stats_merge_single_queue_no_reservoir_double_count():
+    """Regression: with n_queues=1 the run-level and per-queue[0]
+    reservoirs must not alias — merge() pools run-level and per-queue
+    independently, and aliasing double-counted the donor's samples
+    (count came out A + 2B)."""
+    def run(seed):
+        return simulate_run(
+            MetronomePolicy(MetronomeConfig(m=2, v_target_us=10.0,
+                                            t_long_us=500.0)),
+            PoissonWorkload(8.0),
+            SimRunConfig(duration_us=20_000.0, seed=seed))
+
+    a, b, fresh_a = run(1), run(2), run(1)
+    assert a.latency_us is not a.per_queue[0].latency_us
+    b_count = b.latency_us.count
+    b_buf = list(b.latency_us)
+    a.merge(b)
+    assert a.latency_us.count == fresh_a.latency_us.count + b_count
+    assert a.per_queue[0].latency_us.count == a.latency_us.count
+    # the donor is untouched by the merge...
+    assert b.latency_us.count == b_count
+    assert list(b.latency_us) == b_buf
+    # ...even after the adopting side merges again (no adopted aliases)
+    empty = RunStats(backend="sim", policy=a.policy, workload=a.workload)
+    empty.merge(b)
+    b_q0 = b.per_queue[0]
+    before = (b_q0.offered, b_q0.serviced, b_q0.latency_us.count)
+    empty.merge(run(3))
+    assert (b_q0.offered, b_q0.serviced,
+            b_q0.latency_us.count) == before
+
+
+def test_per_queue_reservoirs_decorrelated_and_merge_to_total():
+    """Each queue carries its own latency reservoir (decorrelated
+    seeds), and the run-level reservoir is their weighted union."""
+    rs = simulate_run(
+        MetronomePolicy(MetronomeConfig(m=4, v_target_us=10.0,
+                                        t_long_us=500.0)),
+        PoissonWorkload(12.0),
+        SimRunConfig(duration_us=40_000.0, seed=5, n_queues=4))
+    per_q = [q.latency_us for q in rs.per_queue]
+    assert all(r is not None for r in per_q)
+    assert sum(r.count for r in per_q) == rs.latency_us.count
+    # distinct eviction rngs: spawned seeds differ across queues
+    states = {id(r._np_rng) for r in per_q}
+    assert len(states) == 4
+    seeds_differ = {r._rng.random() for r in per_q}
+    assert len(seeds_differ) == 4
 
 
 def test_runtime_restart_does_not_double_count():
