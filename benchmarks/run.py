@@ -50,6 +50,7 @@ def main() -> None:
                     help="write all rows to this file as JSON")
     args = ap.parse_args()
 
+    from benchmarks.cpu_sharing import cpu_sharing
     from benchmarks.kernels_bench import kernels
     from benchmarks.policy_matrix import matrix_policies_workloads
     from benchmarks.rss_skew import matrix_rss_skew
@@ -73,7 +74,7 @@ def main() -> None:
         table2_vbar_tuning, fig7_tl_sweep, fig8_m_sweep,
         table3_nanosleep_loss, fig11_adaptation, fig12_dpdk_compare,
         matrix_policies_workloads, matrix_rss_skew, sweep_frontier,
-        fig15_applications, kernels, roofline,
+        cpu_sharing, fig15_applications, kernels, roofline,
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -22,8 +22,15 @@ Rows (suite convention: ``name,value,derived``):
   - ``verdict/...``         the calibrated-vs-fixed comparison above;
   - ``sweep/…``             sweep size and wall time (one jit call).
 
-CLI: ``python -m benchmarks.sweep_frontier [--smoke]`` — ``--smoke``
-runs a tiny grid and exits nonzero on a failed verdict (the CI job).
+CLI: ``python -m benchmarks.sweep_frontier [--smoke] [--interference]``
+— ``--smoke`` runs a tiny grid and exits nonzero on a failed verdict
+(the CI job); ``--interference`` runs the whole pipeline on a *noisy
+shared host* (per-wake OS interference + correlated stall windows
+through the batched engine, an analytic guard widened by the
+environment's interference slack, and event-engine spot checks in that
+same noisy environment) with a correspondingly relaxed latency target
+and loss budget — the CPU-sharing counterpart of the quiet-host
+frontier.
 """
 
 from __future__ import annotations
@@ -38,9 +45,16 @@ ROWS = list[tuple[str, float, str]]
 MU_MPPS = 29.76
 TARGET_MEAN_LAT_US = 15.0
 MAX_LOSS = 1e-3
+# noisy-shared-host mode (--interference): a fifth of all wakes delayed
+# by Exp(15us) co-runner preemption, Exp(100us) stall windows every
+# ~5ms; latency target and loss budget relaxed to match the host
+NOISY_ENV = dict(interference_prob=0.2, interference_mean_us=15.0,
+                 stall_rate_per_us=1.0 / 5_000.0, stall_mean_us=100.0)
+NOISY_TARGET_MEAN_LAT_US = 30.0
+NOISY_MAX_LOSS = 0.05
 
 
-def _sweep(quick: bool):
+def _sweep(quick: bool, noisy: bool = False):
     from repro.runtime import SimRunConfig, SweepGrid, simulate_batch
 
     if quick:
@@ -59,7 +73,8 @@ def _sweep(quick: bool):
         seeds = (0, 1)
         duration = 50_000.0
         slot_us = 0.5
-    cfg = SimRunConfig(duration_us=duration)
+    cfg = SimRunConfig(duration_us=duration,
+                       **(NOISY_ENV if noisy else {}))
     grid = SweepGrid.product(t_s_us=t_s_grid, t_l_us=t_l_grid, m=m_grid,
                              rate_mpps=rhos * MU_MPPS, seeds=seeds)
     t0 = time.time()
@@ -69,36 +84,42 @@ def _sweep(quick: bool):
             slot_us)
 
 
-def sweep_frontier(quick: bool = False) -> ROWS:
+def sweep_frontier(quick: bool = False, noisy: bool = False) -> ROWS:
     from repro.runtime import build_operating_table
     from repro.runtime.calibrate import analytic_guard_mask
 
+    target = NOISY_TARGET_MEAN_LAT_US if noisy else TARGET_MEAN_LAT_US
+    max_loss = NOISY_MAX_LOSS if noisy else MAX_LOSS
     (cfg, grid, bs, wall, t_s_grid, t_l_grid, m_grid, rhos, seeds,
-     slot_us) = _sweep(quick)
+     slot_us) = _sweep(quick, noisy)
 
     # seed-averaged (ts, tl, m, rho) lattice
     lat = bs.reshaped("mean_latency_us").mean(axis=-1)[:, :, :, 0, :]
     cpu = bs.reshaped("cpu_fraction").mean(axis=-1)[:, :, :, 0, :]
     loss = bs.reshaped("loss_fraction").mean(axis=-1)[:, :, :, 0, :]
     vac = bs.reshaped("mean_vacation_us").mean(axis=-1)
-    # the same validity rule the calibration layer applies, so the fixed
-    # baseline and the table argmin over one candidate set (this is what
-    # makes the verdict hold by construction)
-    valid = analytic_guard_mask(vac, t_s_grid, t_l_grid, m_grid, rhos,
-                                guard_rel=0.6, slot_us=slot_us)[:, :, :, 0, :]
+    # the same validity rule the calibration layer applies (incl. the
+    # noisy-host slack), so the fixed baseline and the table argmin over
+    # one candidate set (this is what makes the verdict hold by
+    # construction)
+    valid = analytic_guard_mask(
+        vac, t_s_grid, t_l_grid, m_grid, rhos, guard_rel=0.6,
+        slot_us=slot_us,
+        slack_us=cfg.interference_slack_us())[:, :, :, 0, :]
 
     rows: ROWS = [(
         "sweep/points", float(len(grid)),
         f"one_jit_call=True;wall_s={wall:.2f};slots_per_point="
         f"{int(cfg.duration_us / slot_us)};"
-        f"pts_per_s={len(grid) / max(wall, 1e-9):.0f}")]
+        f"pts_per_s={len(grid) / max(wall, 1e-9):.0f};"
+        f"interference={cfg.is_noisy}")]
 
     # per-load Pareto frontier: min CPU within sliding latency bands
     bands = [5.0, 10.0, 15.0, 25.0, 50.0]
     for k, rho in enumerate(rhos):
         flat_lat = lat[..., k].ravel()
         flat_cpu = cpu[..., k].ravel()
-        ok = loss[..., k].ravel() <= MAX_LOSS
+        ok = loss[..., k].ravel() <= max_loss
         for band in bands:
             sel = ok & (flat_lat <= band)
             if not sel.any():
@@ -114,9 +135,9 @@ def sweep_frontier(quick: bool = False) -> ROWS:
     # calibrated table over the same environment — reusing this sweep's
     # BatchStats, so the 2000+ points are simulated exactly once
     table = build_operating_table(
-        rhos=rhos, target_mean_latency_us=TARGET_MEAN_LAT_US,
+        rhos=rhos, target_mean_latency_us=target,
         t_s_grid=t_s_grid, t_l_grid=t_l_grid, m_grid=m_grid, cfg=cfg,
-        seeds=seeds, slot_us=slot_us, max_loss=MAX_LOSS,
+        seeds=seeds, slot_us=slot_us, max_loss=max_loss,
         spot_check=0 if quick else 3, sweep=bs)
     for p in table.points:
         rows.append((
@@ -128,8 +149,8 @@ def sweep_frontier(quick: bool = False) -> ROWS:
     # fixed baseline: the cheapest single (ts, tl, m) meeting the target
     # at EVERY load — what you would statically provision.  Restricted
     # to guard-valid cells, the same filter the table's argmin saw.
-    meets_all = (valid & (lat <= TARGET_MEAN_LAT_US)
-                 & (loss <= MAX_LOSS)).all(axis=-1)
+    meets_all = (valid & (lat <= target)
+                 & (loss <= max_loss)).all(axis=-1)
     verdict_ok = all(p.meets_target for p in table.points)
     if meets_all.any():
         total_cpu = np.where(meets_all, cpu.sum(axis=-1), np.inf)
@@ -147,7 +168,7 @@ def sweep_frontier(quick: bool = False) -> ROWS:
             f"fixed_cpu_sum={base_cpu.sum():.3f};"
             f"calibrated_cpu_sum={tab_cpu.sum():.3f};"
             f"calibrated_leq_fixed_at_every_load={per_load_ok};"
-            f"all_loads_meet_{TARGET_MEAN_LAT_US:g}us_target="
+            f"all_loads_meet_{target:g}us_target="
             f"{all(p.meets_target for p in table.points)}"))
     else:
         verdict_ok = False
@@ -160,7 +181,7 @@ def sweep_frontier(quick: bool = False) -> ROWS:
 
 def main() -> None:
     quick = "--smoke" in sys.argv or "--quick" in sys.argv
-    rows = sweep_frontier(quick=quick)
+    rows = sweep_frontier(quick=quick, noisy="--interference" in sys.argv)
     print("name,value,derived")
     for name, val, derived in rows:
         print(f"{name},{val:.4f},{derived}")

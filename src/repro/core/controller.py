@@ -73,16 +73,22 @@ class MetronomeController:
                 ts_min=self.cfg.ts_min_us, ts_max=self.cfg.resolved_ts_max(),
             )
         )
+        tl = float(self.cfg.t_long_us)
         if self.feedforward is not None:
             w = min(max(self.cfg.feedforward_weight, 0.0), 1.0)
             ts_ff, tl_ff = self.feedforward.timeouts_us(self.rho)
             ts = (1.0 - w) * ts + w * float(ts_ff)
-            self.t_long_us = ((1.0 - w) * self.cfg.t_long_us
-                              + w * float(tl_ff))
+            tl = (1.0 - w) * self.cfg.t_long_us + w * float(tl_ff)
             # table points are pre-validated against the latency target,
             # so only the safety floor applies (the Eq-12 upper clamp
             # would undo the table's low-load CPU savings)
             ts = max(ts, self.cfg.ts_min_us)
+        # T_L >= T_S, always: the role split only works if backups fire
+        # *after* primaries.  A calibrated table rung (or a pathological
+        # config) with T_L below the derived T_S would invert the
+        # backup/primary timeouts, so the backup timeout rises to meet
+        # T_S (re-derived each cycle, so it falls back once T_S does).
+        self.t_long_us = max(tl, ts)
         return ts
 
     # -- control-plane updates ------------------------------------------------

@@ -28,6 +28,13 @@ distills such sweeps into an ``OperatingTable`` the controller consumes
 as a calibrated feed-forward term.  Shared environment config
 (``SimRunConfig``, ``SleepModel``) lives in simcore.py.
 
+CPU sharing is first-class (apps.py): an ``AppLoad`` — duty-cycle CPU
+burner, jitted JAX matmul tenant — co-runs with the pollers on the
+threaded ``Runtime``/``Server`` (progress lands in
+``RunStats.app_ops``/``app_cpu_ns``), and ``co_run_config`` maps an app
+demand to the ``SimRunConfig`` interference model so both simulation
+engines sweep co-location scenarios deterministically.
+
 Adding a retrieval strategy or a traffic scenario is a one-file change:
 implement the protocol, and every backend, benchmark, and the serving
 server can use it.
@@ -49,6 +56,8 @@ _LAZY_SUBMODULE = {
     "SweepGrid": "batched",
     "BatchStats": "batched",
     "simulate_batch": "batched",
+    "unsupported_config_fields": "batched",
+    "validate_batched_config": "batched",
     "OperatingPoint": "calibrate",
     "OperatingTable": "calibrate",
     "CalibrationMismatch": "calibrate",
@@ -64,6 +73,12 @@ def __getattr__(name: str):
     value = getattr(import_module(f".{submodule}", __name__), name)
     globals()[name] = value          # cache: next access skips this hook
     return value
+from .apps import (
+    AppLoad,
+    DutyCycleBurner,
+    MatmulAppLoad,
+    co_run_config,
+)
 from .dispatch import (
     Dispatcher,
     FlowHashDispatch,
@@ -133,8 +148,14 @@ __all__ = [
     "SweepGrid",
     "BatchStats",
     "simulate_batch",
+    "unsupported_config_fields",
+    "validate_batched_config",
     "OperatingPoint",
     "OperatingTable",
     "CalibrationMismatch",
     "build_operating_table",
+    "AppLoad",
+    "DutyCycleBurner",
+    "MatmulAppLoad",
+    "co_run_config",
 ]

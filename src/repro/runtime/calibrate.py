@@ -9,14 +9,18 @@ initial guess.  This module closes the loop empirically:
      engine (``repro.runtime.batched``) — thousands of operating points
      in one JIT-compiled call;
   2. cross-check every point's measured mean vacation against the
-     ``repro.core.analytics`` closed form (``mean_vacation_general``) —
-     points where engine and analysis disagree wildly are discarded as
-     untrustworthy rather than silently selected;
+     ``repro.core.analytics`` closed form (``mean_vacation_general``,
+     evaluated at the per-queue load, widened by the environment's
+     interference slack) — points where engine and analysis disagree
+     wildly are discarded as untrustworthy rather than silently
+     selected;
   3. optionally spot-check selected points against the exact
      event-driven engine (``simulate_run``) within the batched engine's
-     documented parity tolerance;
+     documented parity tolerance — in the same environment the sweep
+     ran in, OS interference and correlated stalls included;
   4. for each offered load, select the cheapest point (min CPU) whose
-     mean latency meets the target -> an ``OperatingTable``.
+     mean latency meets the target -> an ``OperatingTable`` that
+     records the environment it was calibrated for.
 
 The table is a feed-forward term for the runtime control plane:
 ``MetronomeController``/``MetronomePolicy`` accept it (the Eq 10 EWMA
@@ -29,13 +33,13 @@ run offline (e.g. benchmarks/sweep_frontier.py) and deploy later.
 from __future__ import annotations
 
 import json
-from dataclasses import asdict, dataclass, replace
+from dataclasses import asdict, dataclass
 
 import numpy as np
 
 from repro.core import analytics
 
-from .batched import SweepGrid, simulate_batch
+from .batched import SweepGrid, simulate_batch, validate_batched_config
 from .simcore import SimRunConfig
 
 __all__ = [
@@ -77,11 +81,19 @@ class OperatingTable:
     T_L) between calibrated loads, clamped to the calibrated range.
     ``lookup(rho)`` returns the governing row — the nearest calibrated
     load at or *above* the request, so feasibility is conservative.
+
+    ``environment`` records the ``SimRunConfig`` the table was
+    calibrated in (sleep model, wake cost, n_queues, OS interference /
+    stall injection, ...) as a JSON-safe dict, so a table calibrated on
+    a noisy shared host is never mistaken for a quiet-host table (and
+    vice versa) once deployed.  ``None`` only on tables predating the
+    field or built by hand.
     """
 
     target_mean_latency_us: float
     service_rate_mpps: float
     points: tuple[OperatingPoint, ...]
+    environment: dict | None = None
 
     def __post_init__(self):
         object.__setattr__(
@@ -113,6 +125,7 @@ class OperatingTable:
         return json.dumps({
             "target_mean_latency_us": self.target_mean_latency_us,
             "service_rate_mpps": self.service_rate_mpps,
+            "environment": self.environment,
             "points": [asdict(p) for p in self.points],
         }, indent=2)
 
@@ -121,6 +134,7 @@ class OperatingTable:
         d = json.loads(text)
         return cls(target_mean_latency_us=d["target_mean_latency_us"],
                    service_rate_mpps=d["service_rate_mpps"],
+                   environment=d.get("environment"),
                    points=tuple(OperatingPoint(**p) for p in d["points"]))
 
     def save(self, path) -> None:
@@ -134,7 +148,8 @@ class OperatingTable:
 
 
 def analytic_guard_mask(vac_measured, t_s_grid, t_l_grid, m_grid, rhos, *,
-                        guard_rel: float, slot_us: float) -> np.ndarray:
+                        guard_rel: float, slot_us: float,
+                        n_queues=(1,), slack_us: float = 0.0) -> np.ndarray:
     """True where a sweep point's measured mean vacation roughly agrees
     with the App-C closed form (``mean_vacation_general``); a
     disagreement beyond ``guard_rel`` (plus a couple of slots of
@@ -142,7 +157,22 @@ def analytic_guard_mask(vac_measured, t_s_grid, t_l_grid, m_grid, rhos, *,
     different systems and the point must not be selected silently.
 
     ``vac_measured`` has the seed-averaged lattice shape
-    ``(len(t_s_grid), len(t_l_grid), len(m_grid), 1, len(rhos))``.
+    ``(len(t_s_grid), len(t_l_grid), len(m_grid), len(n_queues),
+    len(rhos))``.  ``n_queues`` is the grid's queue-count axis: the
+    engines measure vacations *per queue*, and under uniform dispatch
+    each of the ``nq`` queues carries ~``rho / nq`` while receiving only
+    ~``1/nq`` of the claim events (each wake claims one queue), so the
+    closed form is evaluated at the per-queue load and scaled by ``nq``
+    (feeding it the aggregate rho — the old literal-``[0]`` placeholder
+    — compared per-queue vacations against the wrong prediction for
+    every multi-queue sweep).  ``slack_us`` widens the band additively
+    for noisy-host sweeps — pass
+    ``SimRunConfig.interference_slack_us()``, the expected mean-vacation
+    shift of the environment's OS-interference injection (per-wake
+    Bernoulli x Exp plus the stall process's E[W^2]/2 residual tail) —
+    so contention-honest sweeps are not rejected against a quiet-host
+    prediction.
+
     Shared by ``build_operating_table`` and the sweep-frontier
     benchmark's fixed baseline, so both sides filter candidates with the
     *same* rule (the calibrated-vs-fixed verdict compares argmins over
@@ -151,13 +181,16 @@ def analytic_guard_mask(vac_measured, t_s_grid, t_l_grid, m_grid, rhos, *,
     ts_ax = np.atleast_1d(np.asarray(t_s_grid, dtype=np.float64))
     tl_ax = np.atleast_1d(np.asarray(t_l_grid, dtype=np.float64))
     m_ax = np.atleast_1d(np.asarray(m_grid))
+    nq_ax = np.atleast_1d(np.asarray(n_queues, dtype=np.float64))
     rhos = np.atleast_1d(np.asarray(rhos, dtype=np.float64))
-    TS, TL, M, _, RHO = np.meshgrid(ts_ax, tl_ax, m_ax, [0], rhos,
-                                    indexing="ij")
-    vac_pred = analytics.mean_vacation_general(
-        TS, TL, M, analytics.primary_prob(RHO))
+    TS, TL, M, NQ, RHO = np.meshgrid(ts_ax, tl_ax, m_ax, nq_ax, rhos,
+                                     indexing="ij")
+    NQ = np.maximum(NQ, 1.0)
+    vac_pred = NQ * analytics.mean_vacation_general(
+        TS, TL, M, analytics.primary_prob(RHO / NQ))
     return np.abs(vac_measured - vac_pred) <= (guard_rel * vac_pred
-                                               + 2.0 * slot_us)
+                                               + 2.0 * slot_us
+                                               + float(slack_us))
 
 
 def _event_sim_point(p: OperatingPoint, cfg: SimRunConfig, rate_mpps: float):
@@ -200,16 +233,23 @@ def build_operating_table(
     strays that far (relative) from the App-C closed form — a
     disagreement that large means the engine and the model describe
     different systems, and such a point must not be *selected* silently
-    (see ``analytic_guard_mask``).  ``spot_check > 0`` re-runs that many
-    selected points through the exact event engine and raises
-    ``CalibrationMismatch`` if mean sojourn or CPU disagree beyond
-    ``spot_check_rel`` (plus a small absolute floor) — the batched
-    engine's documented parity band.  ``sweep`` accepts a precomputed
+    (see ``analytic_guard_mask``; the prediction is evaluated at the
+    per-queue load rho/n_queues, and noisy-host environments widen the
+    band by ``cfg.interference_slack_us()``).  ``spot_check > 0`` re-
+    runs that many selected points through the exact event engine — in
+    the *same* environment the sweep ran in, interference and stalls
+    included, never a quieted copy — and raises ``CalibrationMismatch``
+    if mean sojourn or CPU disagree beyond ``spot_check_rel`` (plus an
+    absolute floor matching the batched engine's documented parity band
+    for that environment).  ``sweep`` accepts a precomputed
     ``BatchStats`` for exactly this grid (same axes, same cfg/slot_us —
     e.g. one the caller also uses for frontier analysis) so the batch
     isn't simulated twice; its grid shape is validated.
+
+    The returned table records ``cfg`` as its ``environment``.
     """
     cfg = cfg or SimRunConfig(duration_us=60_000.0)
+    validate_batched_config(cfg)
     rhos = np.atleast_1d(np.asarray(rhos, dtype=np.float64))
     mu = cfg.service_rate_mpps
     grid = SweepGrid.product(t_s_us=t_s_grid, t_l_us=t_l_grid, m=m_grid,
@@ -242,10 +282,13 @@ def build_operating_table(
     ts_ax = np.atleast_1d(np.asarray(t_s_grid, dtype=np.float64))
     tl_ax = np.atleast_1d(np.asarray(t_l_grid, dtype=np.float64))
     m_ax = np.atleast_1d(np.asarray(m_grid))
-    # analytic guard: engine and closed form must roughly agree
+    # analytic guard: engine and closed form must roughly agree — at the
+    # per-queue load, with the noisy-host slack for this environment
     valid = analytic_guard_mask(vac, ts_ax, tl_ax, m_ax, rhos,
                                 guard_rel=analytic_guard_rel,
-                                slot_us=slot_us)
+                                slot_us=slot_us,
+                                n_queues=(cfg.n_queues,),
+                                slack_us=cfg.interference_slack_us())
     feasible = valid & (lat <= target_mean_latency_us) & (loss <= max_loss)
 
     points = []
@@ -271,20 +314,27 @@ def build_operating_table(
             loss_fraction=float(loss[i, j, l, 0, k]), meets_target=met))
 
     table = OperatingTable(target_mean_latency_us=target_mean_latency_us,
-                           service_rate_mpps=mu, points=tuple(points))
+                           service_rate_mpps=mu, points=tuple(points),
+                           environment=asdict(cfg))
 
     if spot_check:
-        check_cfg = replace(cfg, interference_prob=0.0,
-                            stall_rate_per_us=0.0)
+        # contention-honest: the exact engine re-examines selected points
+        # in the environment the table claims to be calibrated for —
+        # interference and stalls included.  (This used to quiet the
+        # config first, laundering noisy-host tables through quiet-host
+        # validation.)  Noisy environments get the batched engine's wider
+        # documented parity floors.
+        lat_floor, cpu_floor = (4.5, 0.04) if cfg.is_noisy else (2.0, 0.03)
         idxs = np.linspace(0, len(points) - 1,
                            min(spot_check, len(points))).astype(int)
         for i in sorted(set(idxs.tolist())):
             p = points[i]
-            rs = _event_sim_point(p, check_cfg, p.rho * mu)
+            rs = _event_sim_point(p, cfg, p.rho * mu)
             lat_err = abs(rs.mean_sojourn_us - p.mean_latency_us)
             cpu_err = abs(rs.cpu_fraction - p.cpu_fraction)
-            if (lat_err > spot_check_rel * p.mean_latency_us + 2.0
-                    or cpu_err > spot_check_rel * p.cpu_fraction + 0.03):
+            if (lat_err > spot_check_rel * p.mean_latency_us + lat_floor
+                    or cpu_err > spot_check_rel * p.cpu_fraction
+                    + cpu_floor):
                 raise CalibrationMismatch(
                     f"operating point {p} failed its event-engine spot "
                     f"check: event mean sojourn {rs.mean_sojourn_us:.2f}us "

@@ -68,13 +68,21 @@ class Runtime:
         idle_work: Callable[[], bool] | None = None,
         latency_reservoir: int = 65_536,
         assignment=None,
+        app_load=None,
     ):
         """``process`` consumes a burst of retrieved items; ``idle_work``
         (optional) is polled during the busy period after each burst and
         returns whether it still made progress — the hook that lets a
         serving engine keep its decode loop inside the busy period.
         ``assignment`` maps threads to queues (default: every thread
-        sweeps every queue, the paper's shared-queue shape)."""
+        sweeps every queue, the paper's shared-queue shape).
+        ``app_load`` (an ``repro.runtime.apps.AppLoad``) co-runs a
+        competing application on the same host for the lifetime of the
+        run — the paper's Sec 5.6 CPU-sharing scenario: its threads
+        start and stop with the pollers, and the work it completed and
+        CPU it burned land in ``RunStats.app_ops`` /
+        ``RunStats.app_cpu_ns`` (the application-throughput side of the
+        sharing trade-off)."""
         self.queues = queues
         self.process = process
         self.policy = policy
@@ -82,6 +90,8 @@ class Runtime:
         self.burst_size = burst_size
         self.sleep_fn = sleep_fn
         self.idle_work = idle_work
+        self.app_load = app_load
+        self._app_threads: list[threading.Thread] = []
         self.stats = RunStats(backend="threads",
                               policy=getattr(policy, "name", ""))
         self._lat_cap = latency_reservoir
@@ -124,11 +134,23 @@ class Runtime:
         ]
         for t in self._threads:
             t.start()
+        if self.app_load is not None:
+            self.app_load.reset()
+            self._app_threads = [
+                threading.Thread(target=self._run_app,
+                                 name=f"app-{i}", daemon=True)
+                for i in range(self.app_load.threads)
+            ]
+            for t in self._app_threads:
+                t.start()
 
     def stop(self, timeout: float = 5.0) -> RunStats:
         self._running.clear()
         for t in self._threads:
             t.join(timeout)
+        for t in self._app_threads:
+            t.join(timeout)
+        self._app_threads = []
         st = self.stats
         st.stopped_ns = time.monotonic_ns()
         base = getattr(self, "_base_counts",
@@ -226,6 +248,20 @@ class Runtime:
                 now_ns=time.monotonic_ns() - st.started_ns))
             if sleep_ns > 0:
                 self.sleep_fn(sleep_ns)
+
+    def _run_app(self) -> None:
+        """Co-run application loop: one quantum of ``app_load.step()``
+        per iteration until the runtime stops; totals are folded into
+        the run's stats when the thread exits (stop() joins first)."""
+        ops = 0
+        t_cpu0 = time.thread_time_ns()
+        app = self.app_load
+        while self._running.is_set():
+            ops += app.step()
+        dt = time.thread_time_ns() - t_cpu0
+        with self._stats_lock:
+            self.stats.app_ops += ops
+            self.stats.app_cpu_ns += dt
 
     # -- workload replay ---------------------------------------------------------
     def run(self, workload, *, duration_us: float,

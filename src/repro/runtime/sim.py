@@ -342,6 +342,15 @@ def _simulate_spin(policy, workload, cfg: SimRunConfig) -> RunStats:
     latency is just the drain position (no vacations); loss only beyond
     saturation.  A spinning sweep sees the union of all Rx rings, so
     multi-queue runs aggregate to one fluid queue of total capacity.
+
+    Correlated stall windows (``cfg.stall_rate_per_us`` /
+    ``stall_mean_us``) deschedule even a spinning core — on a shared
+    host CFS alternates the always-runnable spinner with competing
+    threads — so the fluid model serves *nothing* while a window is
+    open: arrivals pile into the ring and overflow it exactly as they
+    would on real co-located hardware.  Per-wake interference
+    (``interference_prob``) does not apply: a spinner never sleeps, so
+    there is no wake to delay.
     """
     rng = np.random.default_rng(cfg.seed)
     workload.reset(rng)
@@ -352,10 +361,32 @@ def _simulate_spin(policy, workload, cfg: SimRunConfig) -> RunStats:
     offered = dropped = serviced = 0
     backlog = 0.0
     lat_num = 0.0
+    # lazy Poisson stall process, windows merged via max (the same
+    # semantics as the sleep&wake event loop above)
+    next_stall = (rng.exponential(1.0 / cfg.stall_rate_per_us)
+                  if cfg.stall_rate_per_us else np.inf)
+    stall_end = -1.0
     while t < cfg.duration_us:
         n = workload.counts_in(t, t + step)
         offered += n
-        cap = cfg.service_rate_mpps * step
+        stalled = 0.0
+        if cfg.stall_rate_per_us:
+            # carry-over from windows still open at the step boundary
+            if stall_end > t:
+                stalled += min(stall_end, t + step) - t
+            while next_stall <= t + step:
+                # windows merge via max: only the segment not already
+                # covered counts, from its true start (not the step's)
+                w_start = max(next_stall, stall_end)
+                w_end = next_stall + rng.exponential(cfg.stall_mean_us)
+                if w_end > w_start:
+                    seg0 = min(max(w_start, t), t + step)
+                    seg1 = min(max(w_end, t), t + step)
+                    stalled += max(seg1 - seg0, 0.0)
+                    stall_end = max(stall_end, w_end)
+                next_stall += rng.exponential(1.0 / cfg.stall_rate_per_us)
+            stalled = min(stalled, step)
+        cap = cfg.service_rate_mpps * (step - stalled)
         do = min(backlog + n, cap)
         serviced += int(do)
         backlog = backlog + n - do

@@ -101,6 +101,36 @@ class SimRunConfig:
     timeseries_bin_us: float = 0.0            # >0: emit binned time series
     latency_reservoir: int = 262_144
 
+    @property
+    def is_noisy(self) -> bool:
+        """True when any CPU-sharing injection (per-wake interference or
+        correlated stalls) is active — i.e. this is a shared-host, not a
+        quiet-host, environment."""
+        return bool(self.interference_prob or self.stall_rate_per_us)
+
+    def interference_slack_us(self) -> float:
+        """Expected mean-vacation shift of this environment's OS
+        interference over the quiet-host closed forms, in us.
+
+        Two additive terms:
+
+          - per-wake: every re-sleep stretches by Exp(mean) w.p. q, so
+            the wake ending a vacation arrives ``q * mean`` late in
+            expectation;
+          - correlated stalls: the wake ending a vacation lands inside
+            an open Exp(s) window w.p. ~ the stalled time fraction
+            ``rate * s`` and is deferred by the window's residual life
+            (= s, memoryless), i.e. ``rate * s^2`` — the E[W^2]/2 tail
+            of the Poisson window process (E[W^2] = 2 s^2).
+
+        Calibration's analytic guard widens its quiet-host App-C
+        tolerance by this slack so contention-honest sweeps are not
+        rejected for disagreeing with a quiet-host prediction.
+        """
+        per_wake = self.interference_prob * self.interference_mean_us
+        stall = self.stall_rate_per_us * self.stall_mean_us ** 2
+        return per_wake + stall
+
 
 @dataclass
 class EngineSetup:

@@ -199,6 +199,12 @@ class RunStats:
     started_ns: int = 0
     stopped_ns: int = 0
 
+    # co-run application load (repro.runtime.apps): work quanta the
+    # competing app completed during the run and the CPU it burned —
+    # kept separate from awake_ns, which is the I/O task's CPU alone
+    app_ops: int = 0
+    app_cpu_ns: int = 0
+
     latency_us: Reservoir = field(default_factory=Reservoir)
     # analytic backends (the busy-poll fluid model) report closed-form
     # latency summaries instead of samples
@@ -246,6 +252,12 @@ class RunStats:
     @property
     def loss_fraction(self) -> float:
         return self.dropped / max(self.offered, 1)
+
+    @property
+    def app_cpu_fraction(self) -> float:
+        """Cores the co-run application load actually got (0 when none
+        was installed)."""
+        return self.app_cpu_ns / self.duration_ns
 
     @property
     def serviced(self) -> int:
@@ -320,8 +332,8 @@ class RunStats:
         average) and are dropped otherwise.
         """
         for f in ("wakeups", "cycles", "busy_tries", "items", "offered",
-                  "dropped", "awake_ns", "drain_truncations",
-                  "latency_area_us"):
+                  "dropped", "awake_ns", "app_ops", "app_cpu_ns",
+                  "drain_truncations", "latency_area_us"):
             setattr(self, f, getattr(self, f) + getattr(other, f))
         self.started_ns = min(self.started_ns, other.started_ns)
         self.stopped_ns = max(self.stopped_ns, other.stopped_ns)

@@ -67,7 +67,12 @@ class Server:
     def __init__(self, engine: InferenceEngine, policy, *,
                  queue_capacity: int = 1024, sleep_fn=hr_sleep,
                  n_queues: int = 1, dispatcher=None, assignment=None,
-                 operating_table=None):
+                 operating_table=None, app_load=None):
+        """``app_load`` (an ``repro.runtime.apps.AppLoad``) co-runs a
+        competing application on the serving host for the server's
+        lifetime — the CPU-sharing deployment the paper argues
+        sleep&wake retrieval enables; its progress lands in
+        ``stats.app_ops`` / ``stats.app_cpu_ns``."""
         self.engine = engine
         self.policy = policy
         # calibrated operating table (repro.runtime.calibrate): accept a
@@ -111,7 +116,9 @@ class Server:
             latency_sample_every=1,
             idle_work=self._pump,
             assignment=assignment,
+            app_load=app_load,
         )
+        self.app_load = app_load
 
     def _ingest(self, reqs: list) -> None:
         with self._engine_lock:
