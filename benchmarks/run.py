@@ -1,9 +1,12 @@
 """Benchmark harness: one function per paper table/figure (+ kernels +
-roofline + the batched sweep frontier).  Prints ``name,us_per_call,
-derived`` CSV; ``--json out.json`` additionally writes every row
-machine-readably (derived ``k=v;k=v`` strings parsed into dicts — so
-policy/workload labels, p50/p99 latencies and CPU fractions land as
-fields) for a ``BENCH_*.json`` perf trajectory across PRs.
+roofline + the batched sweep frontier + the nonstationary adaptation
+matrix).  Prints ``name,us_per_call,derived`` CSV; ``--json out.json``
+additionally writes every row machine-readably (derived ``k=v;k=v``
+strings parsed into dicts — so policy/workload labels, p50/p99
+latencies, CPU fractions, and the adaptation rows' ``schedule``
+descriptor plus tracking fields — conv_us, overshoot_us,
+violation_frac, rho_rmse — land as fields) for a ``BENCH_*.json`` perf
+trajectory across PRs.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only substr]
                                           [--json out.json]
@@ -50,6 +53,7 @@ def main() -> None:
                     help="write all rows to this file as JSON")
     args = ap.parse_args()
 
+    from benchmarks.adaptation import adaptation
     from benchmarks.cpu_sharing import cpu_sharing
     from benchmarks.kernels_bench import kernels
     from benchmarks.policy_matrix import matrix_policies_workloads
@@ -74,7 +78,7 @@ def main() -> None:
         table2_vbar_tuning, fig7_tl_sweep, fig8_m_sweep,
         table3_nanosleep_loss, fig11_adaptation, fig12_dpdk_compare,
         matrix_policies_workloads, matrix_rss_skew, sweep_frontier,
-        cpu_sharing, fig15_applications, kernels, roofline,
+        cpu_sharing, adaptation, fig15_applications, kernels, roofline,
     ]
     print("name,us_per_call,derived")
     failures = 0

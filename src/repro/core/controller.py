@@ -46,6 +46,12 @@ class MetronomeConfig:
     # weight of the calibrated feed-forward timeout when an operating
     # table is installed (0.0 = ignore it, 1.0 = replace Eq 12 with it)
     feedforward_weight: float = 1.0
+    # record the (cycle, rho, T_S, T_L) trajectory on every cycle end —
+    # the control-plane trace adaptation studies compare feed-forward vs
+    # pure-Eq-12 behavior on (bounded; off by default: the hot path
+    # should not grow a list per cycle unless asked to)
+    record_trajectory: bool = False
+    trajectory_cap: int = 65_536
 
     def resolved_ts_max(self) -> float:
         return self.ts_max_us if self.ts_max_us is not None else self.m * self.v_target_us
@@ -63,6 +69,10 @@ class MetronomeController:
         self.t_long_us: float = float(self.cfg.t_long_us)
         self.t_short_us: float = self._derive_ts()
         self.cycles: int = 0
+        # (cycle, rho, t_s_us, t_l_us) per on_cycle_end when
+        # cfg.record_trajectory — the rho/T_S trace that lets
+        # feed-forward and pure-Eq-12 control be compared point by point
+        self.trajectory: list[tuple[int, float, float, float]] = []
 
     def _derive_ts(self) -> float:
         """rho -> T_S: Eq 12, blended with the calibrated table if one
@@ -99,6 +109,10 @@ class MetronomeController:
         )
         self.t_short_us = self._derive_ts()
         self.cycles += 1
+        if (self.cfg.record_trajectory
+                and len(self.trajectory) < self.cfg.trajectory_cap):
+            self.trajectory.append((self.cycles, self.rho,
+                                    self.t_short_us, self.t_long_us))
         return self.t_short_us
 
     # -- data-plane reads -----------------------------------------------------

@@ -35,6 +35,16 @@ threaded ``Runtime``/``Server`` (progress lands in
 demand to the ``SimRunConfig`` interference model so both simulation
 engines sweep co-location scenarios deterministically.
 
+Nonstationary traffic is first-class (schedule.py): a ``LoadSchedule``
+— step / ramp / sinusoid / MMPP-modulated / ``from_trace`` — modulates
+any workload's rate over time (``ScheduledWorkload`` time-warps the
+base process; the batched engine evaluates the schedule per slot), and
+``SimRunConfig.window_us`` makes both simulation engines emit the same
+windowed adaptation series (``RunStats.windows``, a ``WindowedSeries``)
+from which ``TrackingStats`` — convergence time after each load
+transition, overshoot, latency-target violation fraction, rho tracking
+error — is computed by one shared code path.
+
 Adding a retrieval strategy or a traffic scenario is a one-file change:
 implement the protocol, and every backend, benchmark, and the serving
 server can use it.
@@ -62,6 +72,7 @@ _LAZY_SUBMODULE = {
     "OperatingTable": "calibrate",
     "CalibrationMismatch": "calibrate",
     "build_operating_table": "calibrate",
+    "schedule_spot_check": "calibrate",
 }
 
 
@@ -95,6 +106,14 @@ from .policy import (
 )
 from .queues import BoundedQueue
 from .runtime import Runtime
+from .schedule import (
+    LoadSchedule,
+    MMPPSchedule,
+    RampSchedule,
+    SinusoidSchedule,
+    StepSchedule,
+    from_trace,
+)
 from .sim import (
     HR_SLEEP_MODEL,
     NANOSLEEP_MODEL,
@@ -103,11 +122,12 @@ from .sim import (
     SleepModel,
     simulate_run,
 )
-from .stats import QueueStats, Reservoir, RunStats
+from .stats import QueueStats, Reservoir, RunStats, TrackingStats, WindowedSeries
 from .workload import (
     CBRWorkload,
     OnOffBurstyWorkload,
     PoissonWorkload,
+    ScheduledWorkload,
     TraceReplayWorkload,
     Workload,
 )
@@ -124,6 +144,13 @@ __all__ = [
     "CBRWorkload",
     "OnOffBurstyWorkload",
     "TraceReplayWorkload",
+    "ScheduledWorkload",
+    "LoadSchedule",
+    "StepSchedule",
+    "RampSchedule",
+    "SinusoidSchedule",
+    "MMPPSchedule",
+    "from_trace",
     "Dispatcher",
     "RoundRobinDispatch",
     "FlowHashDispatch",
@@ -139,6 +166,8 @@ __all__ = [
     "RunStats",
     "QueueStats",
     "Reservoir",
+    "WindowedSeries",
+    "TrackingStats",
     "SleepModel",
     "HR_SLEEP_MODEL",
     "NANOSLEEP_MODEL",
@@ -154,6 +183,7 @@ __all__ = [
     "OperatingTable",
     "CalibrationMismatch",
     "build_operating_table",
+    "schedule_spot_check",
     "AppLoad",
     "DutyCycleBurner",
     "MatmulAppLoad",

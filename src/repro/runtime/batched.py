@@ -64,7 +64,13 @@ tests/test_batched_engine.py):
   - timeouts are static per point — the grid *is* the adaptation space
     (the calibration layer, not the engine, closes the loop);
   - arrivals are Poisson only (the workload protocol's generality stays
-    with the event engine);
+    with the event engine), but the rate may be *nonstationary*: a
+    ``repro.runtime.schedule.LoadSchedule`` — per point via
+    ``SweepGrid.schedules`` or batch-wide via ``cfg.schedule`` — is
+    evaluated as a piecewise-constant multiplier per slot, and
+    ``cfg.window_us > 0`` emits the same per-window
+    offered/served/latency/CPU accumulators the event engine keeps
+    (``BatchStats.windows(i)`` / ``.tracking(i, ...)``);
   - busy-period boundaries are quantized to ``slot_us`` (keep
     ``slot_us`` a few times smaller than T_S and 1/mu ≪ slot);
   - multi-queue sweeps release a thread after its one claimed queue
@@ -100,12 +106,16 @@ import jax
 import jax.numpy as jnp
 
 from .simcore import SimRunConfig
-from .stats import Reservoir, RunStats
+from .stats import Reservoir, RunStats, WindowedSeries
 
 __all__ = ["SweepGrid", "BatchStats", "simulate_batch",
            "unsupported_config_fields", "validate_batched_config"]
 
 _DIMS = ("t_s_us", "t_l_us", "m", "n_queues", "rate_mpps", "seed")
+
+# fixed-width piecewise-constant schedule rows the kernel consumes; a
+# schedule denser than this is resampled to its per-segment means
+_MAX_SCHED_SEGMENTS = 256
 
 
 @dataclass(frozen=True)
@@ -116,6 +126,15 @@ class SweepGrid:
     logical ``shape`` so results can be reshaped per axis);
     ``of_points(...)`` wraps an arbitrary list of points (parity tests,
     spot checks).  All arrays share one length ``len(grid)``.
+
+    ``schedules`` (optional) carries one ``LoadSchedule`` — or ``None``
+    for stationary — per point: the batched engine evaluates each row's
+    schedule as a piecewise-constant rate multiplier inside the slot
+    loop, so a single vmapped call can sweep step/ramp/sinusoid/MMPP
+    trajectories next to stationary points.  ``product`` grows the
+    logical ``shape`` by a trailing schedules axis only when a
+    ``schedules`` axis is passed (existing stationary grids keep their
+    shape contract).
     """
 
     t_s_us: np.ndarray
@@ -126,42 +145,57 @@ class SweepGrid:
     seed: np.ndarray
     shape: tuple = ()            # cartesian shape in _DIMS order ("" = flat)
     dims: tuple = _DIMS
+    schedules: tuple = ()        # per-point LoadSchedule | None ("" = none)
 
     @classmethod
     def product(cls, *, t_s_us, t_l_us, rate_mpps, m=(3,), n_queues=(1,),
-                seeds=(0,)) -> "SweepGrid":
+                seeds=(0,), schedules=None) -> "SweepGrid":
         axes = [np.atleast_1d(np.asarray(a)) for a in
                 (t_s_us, t_l_us, m, n_queues, rate_mpps, seeds)]
-        mesh = np.meshgrid(*axes, indexing="ij")
+        sched_axis = (np.arange(len(schedules))
+                      if schedules is not None else np.zeros(1, np.int64))
+        mesh = np.meshgrid(*axes, sched_axis, indexing="ij")
         shape = tuple(a.size for a in axes)
+        if schedules is not None:
+            shape = shape + (len(schedules),)
         vals = [g.ravel() for g in mesh]
+        scheds = (tuple(schedules[i] for i in vals[6])
+                  if schedules is not None else ())
         return cls(t_s_us=vals[0].astype(np.float64),
                    t_l_us=vals[1].astype(np.float64),
                    m=vals[2].astype(np.int32),
                    n_queues=vals[3].astype(np.int32),
                    rate_mpps=vals[4].astype(np.float64),
                    seed=vals[5].astype(np.int64),
-                   shape=shape)
+                   shape=shape,
+                   schedules=scheds)
 
     @classmethod
     def of_points(cls, points) -> "SweepGrid":
         """``points``: iterable of dicts with keys from ``SweepGrid.dims``
-        (missing keys take m=3, n_queues=1, seed=0)."""
+        (missing keys take m=3, n_queues=1, seed=0) plus an optional
+        ``schedule`` (a ``LoadSchedule``) per point."""
         pts = list(points)
         get = lambda k, d: np.asarray([p.get(k, d) for p in pts])  # noqa: E731
+        scheds = tuple(p.get("schedule") for p in pts)
         return cls(t_s_us=get("t_s_us", 10.0).astype(np.float64),
                    t_l_us=get("t_l_us", 500.0).astype(np.float64),
                    m=get("m", 3).astype(np.int32),
                    n_queues=get("n_queues", 1).astype(np.int32),
                    rate_mpps=get("rate_mpps", 14.88).astype(np.float64),
                    seed=get("seed", 0).astype(np.int64),
-                   shape=(len(pts),))
+                   shape=(len(pts),),
+                   schedules=(scheds if any(s is not None for s in scheds)
+                              else ()))
 
     def __len__(self) -> int:
         return int(self.t_s_us.size)
 
     def point(self, i: int) -> dict:
-        return {k: getattr(self, k)[i].item() for k in self.dims}
+        d = {k: getattr(self, k)[i].item() for k in self.dims}
+        if self.schedules:
+            d["schedule"] = self.schedules[i]
+        return d
 
 
 class _SlotStats(NamedTuple):
@@ -201,6 +235,10 @@ class BatchStats:
     lat_area: np.ndarray = field(default_factory=lambda: np.empty(0))
     vac_sum: np.ndarray = field(default_factory=lambda: np.empty(0))
     nv_sum: np.ndarray = field(default_factory=lambda: np.empty(0))
+    # cfg.window_us > 0: per-point windowed accumulators of shape
+    # (len(grid), n_windows, 4) — [offered, served, lat_area, awake] —
+    # the same raw sums the event engine's WindowAccum keeps
+    win: np.ndarray = field(default_factory=lambda: np.empty(0))
 
     # -- derived ---------------------------------------------------------------
     @property
@@ -232,15 +270,54 @@ class BatchStats:
         val = getattr(self, name)
         return np.asarray(val).reshape(self.grid.shape)
 
+    def _schedule(self, i: int):
+        # mirror _schedule_rows' precedence exactly: a None row inside a
+        # scheduled grid falls back to the batch-wide config schedule
+        # (which is what the kernel simulated for that row)
+        if self.grid.schedules and self.grid.schedules[i] is not None:
+            return self.grid.schedules[i]
+        return self.cfg.schedule
+
+    def windows(self, i: int) -> WindowedSeries | None:
+        """Point ``i``'s windowed series — the same accumulator
+        convention (and therefore the same derived-metric /
+        ``TrackingStats`` code path) as the event engine's.  ``None``
+        when the run was not windowed (``cfg.window_us == 0``).  The
+        slot engine keeps no latency samples, so per-window p99 is NaN
+        and there is no controller estimate (static timeouts: the grid,
+        not a controller, is the adaptation space)."""
+        if self.win.size == 0:
+            return None
+        w = self.win[i]
+        return WindowedSeries(
+            window_us=float(self.cfg.window_us),
+            service_rate_mpps=self.cfg.service_rate_mpps,
+            offered=w[:, 0].copy(), served=w[:, 1].copy(),
+            lat_area_us=w[:, 2].copy(), awake_us=w[:, 3].copy())
+
+    def tracking(self, i: int, target_latency_us: float, **kw):
+        """``TrackingStats`` for point ``i`` against its schedule's
+        transitions — identical computation to the event engine's
+        ``stats.windows.tracking(...)``."""
+        ws = self.windows(i)
+        if ws is None:
+            raise ValueError("run was not windowed: set cfg.window_us")
+        sched = self._schedule(i)
+        trans = (sched.transitions(self.cfg.duration_us)
+                 if sched is not None else ())
+        return ws.tracking(trans, target_latency_us, **kw)
+
     def to_run_stats(self, i: int) -> RunStats:
         p = self.grid.point(i)
         mean = float(self.mean_latency_us[i])
         cap = self.cfg.queue_capacity * max(int(p["n_queues"]), 1)
+        sched = self._schedule(i)
         return RunStats(
             backend="batched",
             policy=(f"sleepwake(t_s={p['t_s_us']:g},t_l={p['t_l_us']:g},"
                     f"m={p['m']})"),
             workload=f"poisson({p['rate_mpps']:g})",
+            schedule=sched.descriptor() if sched is not None else "",
             wakeups=int(self.wakeups[i]), cycles=int(self.cycles[i]),
             busy_tries=int(self.busy_tries[i]),
             items=int(self.serviced[i]), offered=int(self.offered[i]),
@@ -261,6 +338,7 @@ class BatchStats:
             # aggregate stats: leave per_queue empty rather than emit
             # all-zero slices that would break the sums-to-total law
             per_queue=[],
+            windows=self.windows(i),
             vacations_us=np.asarray([self.mean_vacation_us[i]]),
             busies_us=np.asarray([self.serviced[i]
                                   / self.cfg.service_rate_mpps
@@ -275,8 +353,18 @@ class BatchStats:
 @lru_cache(maxsize=16)
 def _compiled_sweep(n_slots: int, slot_us: float, m_max: int, q_max: int,
                     mu: float, capacity: float, wake_cost_us: float,
-                    sleep_params: tuple, interference_params: tuple):
-    """Build + jit the vmapped fixed-slot kernel for one static shape."""
+                    sleep_params: tuple, interference_params: tuple,
+                    n_seg: int = 0, n_windows: int = 0,
+                    window_us: float = 0.0):
+    """Build + jit the vmapped fixed-slot kernel for one static shape.
+
+    ``n_seg > 0`` compiles the nonstationary variant: each point carries
+    a piecewise-constant load schedule as ``(edges, scales)`` rows of
+    width ``n_seg``, looked up per slot (the arrival rate becomes
+    ``lam * scale(now)``).  ``n_windows > 0`` additionally accumulates
+    the per-window [offered, served, lat_area, awake] sums the
+    adaptation-tracking layer consumes (same convention as the event
+    engine's ``WindowAccum``)."""
     base_us, slope, sigma_us, tail_prob, tail_mean_us = sleep_params
     intf_prob, intf_mean_us, stall_rate, stall_mean_us = interference_params
     # exact per-slot hit probability of the Poisson stall-start process
@@ -285,7 +373,8 @@ def _compiled_sweep(n_slots: int, slot_us: float, m_max: int, q_max: int,
     t_idx = jnp.arange(m_max)
     q_idx = jnp.arange(q_max)
 
-    def one_point(t_s, t_l, m, nq, lam, seed_lo, seed_hi):
+    def one_point(t_s, t_l, m, nq, lam, seed_lo, seed_hi,
+                  sched_edges, sched_scales):
         tmask = t_idx < m
         qmask = q_idx < nq
         lam_q = jnp.where(qmask, lam / nq, 0.0)
@@ -302,7 +391,7 @@ def _compiled_sweep(n_slots: int, slot_us: float, m_max: int, q_max: int,
 
         def step(carry, t):
             (sleep_rem, attached, backlog, vac_timer, arr_res, stall_end,
-             S) = carry
+             S, win_acc) = carry
             now = t.astype(jnp.float32) * dt
             kt_step = jax.random.fold_in(key, t)
             if tail_prob > 0.0:
@@ -323,8 +412,16 @@ def _compiled_sweep(n_slots: int, slot_us: float, m_max: int, q_max: int,
                 stall_end = jnp.where(hit_s,
                                       jnp.maximum(stall_end, win), stall_end)
 
-            # 1. arrivals: residual-carried Gaussian fluid ~ Poisson
-            mu_a = lam_q * dt
+            # 1. arrivals: residual-carried Gaussian fluid ~ Poisson,
+            # rate modulated by the point's load schedule when one is
+            # compiled in (piecewise-constant scale looked up per slot)
+            if n_seg > 0:
+                si = jnp.clip(
+                    jnp.searchsorted(sched_edges, now, side="right") - 1,
+                    0, n_seg - 1)
+                mu_a = lam_q * sched_scales[si] * dt
+            else:
+                mu_a = lam_q * dt
             raw = arr_res + mu_a + jnp.sqrt(mu_a) * zs[:q_max]
             a = jnp.maximum(raw, 0.0)
             arr_res = jnp.minimum(raw, 0.0)      # deficit carried forward
@@ -431,8 +528,16 @@ def _compiled_sweep(n_slots: int, slot_us: float, m_max: int, q_max: int,
                 vac_sum=S.vac_sum + vac_sum,
                 nv_sum=S.nv_sum + nv_sum,
             )
+            if n_windows > 0:
+                # the event engine's WindowAccum convention: raw
+                # [offered, served, lat_area, awake] sums per window
+                w = jnp.minimum((now / window_us).astype(jnp.int32),
+                                n_windows - 1)
+                win_acc = win_acc.at[w].add(jnp.stack([
+                    offered, served, lat_area,
+                    n_wake * wake_cost_us + served / mu]))
             return (sleep_rem, attached, backlog, vac_timer, arr_res,
-                    stall_end, S), None
+                    stall_end, S, win_acc), None
 
         z0 = jnp.float32(0.0)
         init = (sleep0,
@@ -441,10 +546,11 @@ def _compiled_sweep(n_slots: int, slot_us: float, m_max: int, q_max: int,
                 jnp.zeros(q_max, jnp.float32),
                 jnp.zeros(q_max, jnp.float32),
                 jnp.float32(-1.0),          # stall_end: no window open
-                _SlotStats(z0, z0, z0, z0, z0, z0, z0, z0, z0, z0))
-        (_, _, _, _, _, _, S), _ = jax.lax.scan(
+                _SlotStats(z0, z0, z0, z0, z0, z0, z0, z0, z0, z0),
+                jnp.zeros((max(n_windows, 1), 4), jnp.float32))
+        (_, _, _, _, _, _, S, win_acc), _ = jax.lax.scan(
             step, init, jnp.arange(n_slots, dtype=jnp.int32))
-        return S
+        return S, win_acc
 
     return jax.jit(jax.vmap(one_point))
 
@@ -471,22 +577,58 @@ def validate_batched_config(cfg: SimRunConfig) -> None:
             + "; use repro.runtime.sim.simulate_run for those studies")
 
 
+def _schedule_rows(grid: SweepGrid, cfg: SimRunConfig
+                   ) -> tuple[int, np.ndarray, np.ndarray]:
+    """Compile the batch's load schedules to fixed-width
+    ``(edges, scales)`` rows.  Per-point grid schedules win over the
+    config-wide one; ``(0, trivial, trivial)`` when every point is
+    stationary (the kernel then skips the lookup entirely)."""
+    n = len(grid)
+    if grid.schedules:
+        scheds = list(grid.schedules)
+        if cfg.schedule is not None:
+            scheds = [s if s is not None else cfg.schedule for s in scheds]
+    elif cfg.schedule is not None:
+        scheds = [cfg.schedule] * n
+    else:
+        return 0, np.zeros((n, 1)), np.ones((n, 1))
+    n_seg = 1
+    for s in scheds:
+        if s is not None:
+            n_seg = max(n_seg, len(s.segments(cfg.duration_us)[0]))
+    n_seg = min(n_seg, _MAX_SCHED_SEGMENTS)
+    edges = np.zeros((n, n_seg))
+    scales = np.ones((n, n_seg))
+    for i, s in enumerate(scheds):
+        if s is None:       # stationary row inside a scheduled batch
+            edges[i] = np.concatenate(
+                [[0.0], cfg.duration_us + 1.0 + np.arange(n_seg - 1)])
+        else:
+            edges[i], scales[i] = s.compiled(cfg.duration_us, n_seg)
+    return n_seg, edges, scales
+
+
 def simulate_batch(grid: SweepGrid, cfg: SimRunConfig | None = None, *,
                    slot_us: float = 0.5) -> BatchStats:
     """Simulate every operating point in ``grid`` — one JIT-compiled,
     vmapped call over the whole batch.
 
     ``cfg`` supplies the environment (duration, mu, per-queue capacity,
-    sleep model, wake cost, OS interference / correlated stalls); per-
-    point knobs (T_S, T_L, M, n_queues, offered Poisson rate, seed) come
-    from the grid and override the config's.  Binned time series remain
-    event-engine-only and raise (``validate_batched_config``).
+    sleep model, wake cost, OS interference / correlated stalls, load
+    schedule, window size); per-point knobs (T_S, T_L, M, n_queues,
+    offered Poisson rate, seed, schedule) come from the grid and
+    override the config's.  ``cfg.window_us > 0`` turns on the windowed
+    adaptation series (``BatchStats.windows(i)``).  Binned time series
+    remain event-engine-only and raise (``validate_batched_config``).
     """
     cfg = cfg or SimRunConfig()
     validate_batched_config(cfg)
     n_slots = max(int(math.ceil(cfg.duration_us / slot_us)), 1)
+    n_windows = (int(math.ceil(cfg.duration_us / cfg.window_us))
+                 if cfg.window_us > 0 else 0)
     m_max = int(grid.m.max())
     q_max = int(grid.n_queues.max())
+    n_seg, sched_edges, sched_scales = _schedule_rows(grid, cfg)
     sm = cfg.sleep_model
     fn = _compiled_sweep(
         n_slots, float(slot_us), m_max, q_max,
@@ -495,15 +637,19 @@ def simulate_batch(grid: SweepGrid, cfg: SimRunConfig | None = None, *,
         (float(sm.base_us), float(sm.slope), float(sm.sigma_us),
          float(sm.tail_prob), float(sm.tail_mean_us)),
         (float(cfg.interference_prob), float(cfg.interference_mean_us),
-         float(cfg.stall_rate_per_us), float(cfg.stall_mean_us)))
+         float(cfg.stall_rate_per_us), float(cfg.stall_mean_us)),
+        n_seg, n_windows, float(cfg.window_us))
     seed64 = np.asarray(grid.seed, dtype=np.uint64)
-    out = fn(jnp.asarray(grid.t_s_us, jnp.float32),
-             jnp.asarray(grid.t_l_us, jnp.float32),
-             jnp.asarray(grid.m, jnp.int32),
-             jnp.asarray(grid.n_queues, jnp.int32),
-             jnp.asarray(grid.rate_mpps, jnp.float32),
-             jnp.asarray((seed64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)),
-             jnp.asarray((seed64 >> np.uint64(32)).astype(np.uint32)))
+    out, win = fn(
+        jnp.asarray(grid.t_s_us, jnp.float32),
+        jnp.asarray(grid.t_l_us, jnp.float32),
+        jnp.asarray(grid.m, jnp.int32),
+        jnp.asarray(grid.n_queues, jnp.int32),
+        jnp.asarray(grid.rate_mpps, jnp.float32),
+        jnp.asarray((seed64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)),
+        jnp.asarray((seed64 >> np.uint64(32)).astype(np.uint32)),
+        jnp.asarray(sched_edges, jnp.float32),
+        jnp.asarray(sched_scales, jnp.float32))
     vals = {k: np.asarray(v, dtype=np.float64)
             for k, v in out._asdict().items()}
     return BatchStats(grid=grid, cfg=cfg, slot_us=float(slot_us),
@@ -511,4 +657,6 @@ def simulate_batch(grid: SweepGrid, cfg: SimRunConfig | None = None, *,
                       serviced=vals["serviced"], wakeups=vals["wakeups"],
                       busy_tries=vals["busy_tries"], cycles=vals["cycles"],
                       awake_us=vals["awake_us"], lat_area=vals["lat_area"],
-                      vac_sum=vals["vac_sum"], nv_sum=vals["nv_sum"])
+                      vac_sum=vals["vac_sum"], nv_sum=vals["nv_sum"],
+                      win=(np.asarray(win, dtype=np.float64) if n_windows
+                           else np.empty(0)))

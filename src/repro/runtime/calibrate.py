@@ -33,7 +33,7 @@ run offline (e.g. benchmarks/sweep_frontier.py) and deploy later.
 from __future__ import annotations
 
 import json
-from dataclasses import asdict, dataclass
+from dataclasses import asdict, dataclass, replace
 
 import numpy as np
 
@@ -48,6 +48,7 @@ __all__ = [
     "CalibrationMismatch",
     "analytic_guard_mask",
     "build_operating_table",
+    "schedule_spot_check",
 ]
 
 
@@ -208,6 +209,57 @@ def _event_sim_point(p: OperatingPoint, cfg: SimRunConfig, rate_mpps: float):
     return simulate_run(policy, PoissonWorkload(rate_mpps), cfg)
 
 
+def schedule_spot_check(table: OperatingTable, schedule, *,
+                        cfg: SimRunConfig | None = None,
+                        peak_rho: float | None = None,
+                        window_us: float = 2_000.0,
+                        max_violation: float = 0.5,
+                        target_slack: float = 2.0):
+    """Closed-loop, *nonstationary* validation of a calibrated table:
+    run the exact event engine with the table installed as feed-forward
+    while ``schedule`` modulates a Poisson load whose peak reaches the
+    table's top calibrated rho, and judge the windowed tracking
+    behavior.
+
+    Raises ``CalibrationMismatch`` when the fraction of windows whose
+    mean latency exceeds ``target_slack * table.target`` is above
+    ``max_violation`` — a table that cannot keep latency within a
+    generous multiple of its own target while the load moves across its
+    calibrated range is not deployable as a feed-forward term, however
+    good its per-load steady-state numbers look.  Returns the
+    ``(RunStats, TrackingStats)`` pair for inspection.
+    """
+    from repro.core.controller import MetronomeConfig
+
+    from .policy import MetronomePolicy
+    from .sim import simulate_run
+    from .workload import PoissonWorkload
+
+    base = cfg or SimRunConfig(duration_us=60_000.0)
+    run_cfg = replace(base, schedule=schedule, window_us=float(window_us))
+    rho_peak = (float(peak_rho) if peak_rho is not None
+                else float(np.max(table.rhos)))
+    scales = schedule.segments(run_cfg.duration_us)[1]
+    scale_max = float(np.max(scales)) if scales.size else 1.0
+    base_rate = rho_peak * table.service_rate_mpps / max(scale_max, 1e-9)
+    m = int(round(float(np.median([p.m for p in table.points]))))
+    policy = MetronomePolicy(
+        MetronomeConfig(m=m, t_long_us=float(table.points[-1].t_l_us)),
+        operating_table=table)
+    rs = simulate_run(policy, PoissonWorkload(base_rate), run_cfg)
+    tk = rs.windows.tracking(
+        schedule.transitions(run_cfg.duration_us),
+        target_slack * table.target_mean_latency_us)
+    if tk.violation_fraction > max_violation:
+        raise CalibrationMismatch(
+            f"operating table failed its schedule spot check: "
+            f"{tk.violation_fraction:.0%} of {window_us:g}us windows "
+            f"exceeded {target_slack:g}x the {table.target_mean_latency_us:g}us "
+            f"calibration target under schedule "
+            f"{schedule.descriptor()} (allowed {max_violation:.0%})")
+    return rs, tk
+
+
 def build_operating_table(
     *,
     rhos,
@@ -223,6 +275,7 @@ def build_operating_table(
     spot_check: int = 0,
     spot_check_rel: float = 0.25,
     sweep=None,
+    schedule_check=None,
 ) -> OperatingTable:
     """Sweep (t_s x t_l x m x rho x seed) through the batched engine and
     distill an ``OperatingTable``: per load, the minimum-CPU point whose
@@ -246,10 +299,27 @@ def build_operating_table(
     e.g. one the caller also uses for frontier analysis) so the batch
     isn't simulated twice; its grid shape is validated.
 
+    ``schedule_check`` (a ``repro.runtime.schedule.LoadSchedule``)
+    additionally validates the finished table *closed-loop under
+    nonstationary load*: the exact event engine replays the schedule
+    with the table installed as feed-forward and
+    ``schedule_spot_check`` raises ``CalibrationMismatch`` if the
+    windowed latency violates a generous multiple of the target too
+    often.  Calibration sweeps themselves must be stationary —
+    ``cfg.schedule`` is rejected (a moving rate would mislabel every
+    rho rung of the table).
+
     The returned table records ``cfg`` as its ``environment``.
     """
     cfg = cfg or SimRunConfig(duration_us=60_000.0)
     validate_batched_config(cfg)
+    if cfg.schedule is not None:
+        raise ValueError(
+            "calibration sweeps must run on stationary loads: each table "
+            "rung is labeled with one rho, which a cfg.schedule would "
+            "modulate mid-measurement.  Pass the schedule as "
+            "schedule_check= to validate the finished table under "
+            "nonstationary load instead")
     rhos = np.atleast_1d(np.asarray(rhos, dtype=np.float64))
     mu = cfg.service_rate_mpps
     grid = SweepGrid.product(t_s_us=t_s_grid, t_l_us=t_l_grid, m=m_grid,
@@ -341,4 +411,6 @@ def build_operating_table(
                     f"vs batched {p.mean_latency_us:.2f}us, event cpu "
                     f"{rs.cpu_fraction:.3f} vs batched "
                     f"{p.cpu_fraction:.3f}")
+    if schedule_check is not None:
+        schedule_spot_check(table, schedule_check, cfg=cfg)
     return table

@@ -132,6 +132,12 @@ class MetronomePolicy:
     def t_short_us(self) -> float:
         return self.controller.t_short_us
 
+    @property
+    def trajectory(self) -> list:
+        """The controller's recorded (cycle, rho, T_S, T_L) trace —
+        empty unless ``cfg.record_trajectory`` is on."""
+        return self.controller.trajectory
+
     def reset(self) -> None:
         # re-arm in place: callers hold references to self.controller
         self.controller.__post_init__()

@@ -267,16 +267,25 @@ class Runtime:
     def run(self, workload, *, duration_us: float,
             payload: Callable[[int], object] = lambda i: i,
             seed: int = 0, drain_timeout_s: float = 5.0,
-            dispatcher=None) -> RunStats:
+            dispatcher=None, schedule=None) -> RunStats:
         """Replay ``workload`` against the queues in real time, then stop.
 
         Arrivals are generated by ``workload.iter_arrivals`` and pushed at
         their scheduled offsets (a software traffic generator on the same
         host); ``dispatcher`` (default round-robin, the historical
-        behavior) picks the queue each arrival lands in.  Returns the
-        unified ``RunStats`` — directly comparable to
-        ``repro.runtime.sim.simulate_run`` for the same policy/workload.
+        behavior) picks the queue each arrival lands in.  ``schedule``
+        (a ``repro.runtime.schedule.LoadSchedule``) modulates the
+        workload's rate over the run — the live-replay counterpart of
+        ``SimRunConfig.schedule``, through the identical time-warping
+        wrapper.  Returns the unified ``RunStats`` — directly comparable
+        to ``repro.runtime.sim.simulate_run`` for the same
+        policy/workload/schedule.
         """
+        base_wl = getattr(workload, "base", workload)  # unwrap pre-scheduled
+        workload_label = getattr(base_wl, "name", type(base_wl).__name__)
+        if schedule is not None:
+            from .workload import ScheduledWorkload
+            workload = ScheduledWorkload(workload, schedule)
         rng = np.random.default_rng(seed)
         dispatcher = dispatcher or RoundRobinDispatch()
         dispatcher.reset(len(self.queues), rng)
@@ -300,7 +309,9 @@ class Runtime:
         while any(len(q) for q in self.queues) and time.monotonic() < deadline:
             time.sleep(0.005)
         st = self.stop()
-        st.workload = getattr(workload, "name", type(workload).__name__)
+        st.workload = workload_label
+        sched = schedule or getattr(workload, "schedule", None)
+        st.schedule = sched.descriptor() if sched is not None else ""
         st.feeder_lag_us = max_lag_ns / 1e3
         if n and max_lag_ns / 1e3 > 0.05 * duration_us:
             warnings.warn(

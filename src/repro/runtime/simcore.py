@@ -25,7 +25,7 @@ import numpy as np
 
 from .assignment import SharedAssignment
 from .dispatch import RoundRobinDispatch
-from .stats import Reservoir
+from .stats import Reservoir, WindowedSeries
 
 __all__ = [
     "SleepModel",
@@ -34,6 +34,7 @@ __all__ = [
     "PERFECT_SLEEP_MODEL",
     "SimRunConfig",
     "EngineSetup",
+    "WindowAccum",
     "prepare_run",
     "queue_reservoirs",
 ]
@@ -100,6 +101,16 @@ class SimRunConfig:
     seed: int = 0
     timeseries_bin_us: float = 0.0            # >0: emit binned time series
     latency_reservoir: int = 262_144
+    # Nonstationary traffic: a repro.runtime.schedule.LoadSchedule that
+    # modulates the workload's rate over time.  The event engine wraps
+    # the workload in a time-warping ScheduledWorkload; the batched
+    # engine evaluates the schedule's piecewise-constant scale per slot.
+    schedule: object | None = None
+    # >0: both simulation engines emit RunStats.windows — per-window
+    # offered/served/latency/CPU/rho accumulators (WindowedSeries), the
+    # cross-backend adaptation-tracking surface (unlike
+    # timeseries_bin_us, which stays event-engine-only).
+    window_us: float = 0.0
 
     @property
     def is_noisy(self) -> bool:
@@ -135,8 +146,9 @@ class SimRunConfig:
 @dataclass
 class EngineSetup:
     """Normalized run inputs an engine starts from: seeded rng, resolved
-    dispatcher/assignment, thread slots, and the distinct policy objects
-    behind them (already ``reset()``)."""
+    dispatcher/assignment, thread slots, the distinct policy objects
+    behind them (already ``reset()``), and the workload — schedule-
+    wrapped when the config carries a ``LoadSchedule``."""
 
     rng: np.random.Generator
     n_queues: int
@@ -144,15 +156,39 @@ class EngineSetup:
     assignment: object
     slots: list
     policies: list
+    workload: object = None
+
+
+def scheduled_workload(workload, cfg: SimRunConfig):
+    """Apply ``cfg.schedule`` to ``workload`` (idempotent: a workload
+    already wrapped with the *same* schedule passes through so callers
+    can pre-wrap; a pre-wrap carrying a *different* schedule raises —
+    silently running one schedule while stamping another on the stats
+    would poison every tracking consumer downstream)."""
+    from .workload import ScheduledWorkload
+
+    if isinstance(workload, ScheduledWorkload):
+        if cfg.schedule is not None and workload.schedule != cfg.schedule:
+            raise ValueError(
+                "workload is already wrapped with schedule "
+                f"{workload.schedule.descriptor()!r} but cfg.schedule is "
+                f"{cfg.schedule.descriptor()!r}; pass the bare workload "
+                "or make the schedules match")
+        return workload
+    if cfg.schedule is None:
+        return workload
+    return ScheduledWorkload(workload, cfg.schedule)
 
 
 def prepare_run(policy, workload, cfg: SimRunConfig, *,
                 dispatcher=None, assignment=None) -> EngineSetup:
     """Resolve defaults and reset all run-scoped state, identically for
-    every engine: seed the rng, reset the workload, resolve the
-    dispatcher and assignment, expand the policy into thread slots, and
-    reset each distinct policy object exactly once (shared slots alias
-    one policy; dedicated slots carry per-queue clones)."""
+    every engine: apply the config's load schedule to the workload, seed
+    the rng, reset the workload, resolve the dispatcher and assignment,
+    expand the policy into thread slots, and reset each distinct policy
+    object exactly once (shared slots alias one policy; dedicated slots
+    carry per-queue clones)."""
+    workload = scheduled_workload(workload, cfg)
     rng = np.random.default_rng(cfg.seed)
     workload.reset(rng)
     nq = max(int(cfg.n_queues), 1)
@@ -168,7 +204,79 @@ def prepare_run(policy, workload, cfg: SimRunConfig, *,
     for p in policies:
         p.reset()
     return EngineSetup(rng=rng, n_queues=nq, dispatcher=dispatcher,
-                       assignment=assignment, slots=slots, policies=policies)
+                       assignment=assignment, slots=slots,
+                       policies=policies, workload=workload)
+
+
+class WindowAccum:
+    """Serial-engine side of the windowed adaptation series: raw
+    per-window sums accumulated at event time, assembled into the same
+    ``WindowedSeries`` the batched engine emits (so
+    ``TrackingStats`` is one code path across backends).
+
+    Inactive (every call a no-op) when ``cfg.window_us == 0`` — the
+    engines call unconditionally and pay nothing on stationary runs.
+    """
+
+    __slots__ = ("window_us", "n", "offered", "served", "lat_area",
+                 "awake", "rho_sum", "rho_cnt", "ts_sum", "samples")
+
+    def __init__(self, cfg: SimRunConfig):
+        self.window_us = float(cfg.window_us)
+        self.n = (int(np.ceil(cfg.duration_us / cfg.window_us))
+                  if cfg.window_us > 0 else 0)
+        n = max(self.n, 1)
+        self.offered = np.zeros(n)
+        self.served = np.zeros(n)
+        self.lat_area = np.zeros(n)
+        self.awake = np.zeros(n)
+        self.rho_sum = np.zeros(n)
+        self.rho_cnt = np.zeros(n)
+        self.ts_sum = np.zeros(n)
+        self.samples: list[list[float]] = [[] for _ in range(n)]
+
+    def _idx(self, t_us: float) -> int:
+        return min(max(int(t_us / self.window_us), 0), self.n - 1)
+
+    def add(self, t_us: float, *, offered=0.0, served=0.0, lat_area=0.0,
+            awake=0.0) -> None:
+        if not self.n:
+            return
+        i = self._idx(t_us)
+        self.offered[i] += offered
+        self.served[i] += served
+        self.lat_area[i] += lat_area
+        self.awake[i] += awake
+
+    def control(self, t_us: float, rho: float, ts_us: float) -> None:
+        """One controller sample (rho estimate + current T_S) — call on
+        each primary wake; NaN rho (no estimator) is skipped."""
+        if not self.n or not np.isfinite(rho):
+            return
+        i = self._idx(t_us)
+        self.rho_sum[i] += rho
+        self.rho_cnt[i] += 1
+        self.ts_sum[i] += ts_us
+
+    def latency_samples(self, t_us: float, values) -> None:
+        if not self.n:
+            return
+        self.samples[self._idx(t_us)].extend(values)
+
+    def series(self, cfg: SimRunConfig) -> WindowedSeries | None:
+        if not self.n:
+            return None
+        p99 = np.full(self.n, np.nan)
+        for i, s in enumerate(self.samples):
+            if s:
+                p99[i] = float(np.percentile(np.asarray(s), 99))
+        return WindowedSeries(
+            window_us=self.window_us,
+            service_rate_mpps=cfg.service_rate_mpps,
+            offered=self.offered, served=self.served,
+            lat_area_us=self.lat_area, awake_us=self.awake,
+            rho_sum=self.rho_sum, rho_cnt=self.rho_cnt,
+            ts_sum=self.ts_sum, p99_latency_us=p99)
 
 
 def queue_reservoirs(cfg: SimRunConfig, n_queues: int) -> list[Reservoir]:

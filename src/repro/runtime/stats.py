@@ -22,7 +22,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-__all__ = ["Reservoir", "QueueStats", "RunStats"]
+__all__ = ["Reservoir", "QueueStats", "RunStats", "WindowedSeries",
+           "TrackingStats"]
 
 
 class Reservoir:
@@ -140,6 +141,236 @@ def _empty() -> np.ndarray:
 
 
 @dataclass
+class WindowedSeries:
+    """Per-window accumulators of one run, shared by every backend.
+
+    Raw sums are stored (never derived values), so the derived metrics —
+    per-window mean latency via Little's law, CPU fraction, offered /
+    served rates, estimated vs true rho — are computed by *one* code
+    path regardless of which engine filled the accumulators, and two
+    equal-grid series merge by plain addition.  All arrays have one
+    entry per window of ``window_us``.
+
+      - ``offered`` / ``served``  packets entering / leaving per window;
+      - ``lat_area_us``  queue-depth integral accrued in the window
+        (packet*us) — ``mean_latency_us`` is its Little's-law ratio;
+      - ``awake_us``  poller CPU charged in the window;
+      - ``rho_sum`` / ``rho_cnt``  controller load-estimate samples
+        (one per primary wake; zero count = no estimator, e.g. the
+        batched engine's static points or busy polling);
+      - ``ts_sum``  the controller's T_S at those samples;
+      - ``p99_latency_us``  per-window sampled p99 (NaN where the
+        backend keeps no samples, e.g. the batched engine).
+    """
+
+    window_us: float
+    service_rate_mpps: float
+    offered: np.ndarray
+    served: np.ndarray
+    lat_area_us: np.ndarray
+    awake_us: np.ndarray
+    rho_sum: np.ndarray = field(default_factory=_empty)
+    rho_cnt: np.ndarray = field(default_factory=_empty)
+    ts_sum: np.ndarray = field(default_factory=_empty)
+    p99_latency_us: np.ndarray = field(default_factory=_empty)
+
+    def __post_init__(self):
+        n = len(self.offered)
+        for f in ("rho_sum", "rho_cnt", "ts_sum"):
+            if getattr(self, f).size == 0:
+                setattr(self, f, np.zeros(n))
+        if self.p99_latency_us.size == 0:
+            self.p99_latency_us = np.full(n, np.nan)
+
+    # -- derived ---------------------------------------------------------------
+    @property
+    def n_windows(self) -> int:
+        return len(self.offered)
+
+    @property
+    def t_us(self) -> np.ndarray:
+        """Window start times."""
+        return np.arange(self.n_windows) * self.window_us
+
+    @property
+    def mean_latency_us(self) -> np.ndarray:
+        """Little's-law mean sojourn per window (NaN where nothing was
+        served — no departures means no latency observation)."""
+        out = np.full(self.n_windows, np.nan)
+        m = self.served > 0
+        out[m] = self.lat_area_us[m] / self.served[m]
+        return out
+
+    @property
+    def cpu_fraction(self) -> np.ndarray:
+        return self.awake_us / max(self.window_us, 1e-9)
+
+    @property
+    def offered_mpps(self) -> np.ndarray:
+        return self.offered / max(self.window_us, 1e-9)
+
+    @property
+    def tput_mpps(self) -> np.ndarray:
+        return self.served / max(self.window_us, 1e-9)
+
+    @property
+    def rho_true(self) -> np.ndarray:
+        """Actual offered load per window (what Eq 10 is estimating)."""
+        return self.offered_mpps / max(self.service_rate_mpps, 1e-9)
+
+    @property
+    def rho_est(self) -> np.ndarray:
+        """Controller EWMA estimate per window (NaN without samples)."""
+        out = np.full(self.n_windows, np.nan)
+        m = self.rho_cnt > 0
+        out[m] = self.rho_sum[m] / self.rho_cnt[m]
+        return out
+
+    @property
+    def ts_us(self) -> np.ndarray:
+        out = np.full(self.n_windows, np.nan)
+        m = self.rho_cnt > 0
+        out[m] = self.ts_sum[m] / self.rho_cnt[m]
+        return out
+
+    def merge(self, other: "WindowedSeries") -> "WindowedSeries":
+        """Sum accumulators of two equal-grid shards (raises on
+        mismatched window grids — derived ratios then re-derive from the
+        pooled sums).  Sampled p99 combines conservatively (max)."""
+        if (self.window_us != other.window_us
+                or self.n_windows != other.n_windows):
+            raise ValueError("cannot merge WindowedSeries on different "
+                             "window grids")
+        for f in ("offered", "served", "lat_area_us", "awake_us",
+                  "rho_sum", "rho_cnt", "ts_sum"):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            self.p99_latency_us = np.fmax(self.p99_latency_us,
+                                          other.p99_latency_us)
+        return self
+
+    def tracking(self, transitions_us, target_latency_us: float, *,
+                 settle_rel: float = 0.25, settle_abs_us: float = 2.0,
+                 hold_windows: int = 3) -> "TrackingStats":
+        """Adaptation quality against this series — ONE implementation
+        for every backend (the acceptance criterion of the
+        nonstationary-traffic tier).
+
+        The run is cut into regimes at ``transitions_us`` (the
+        schedule's load-change times).  Per regime the *settled* latency
+        is the median of the regime's last third of windows; the
+        convergence time after a transition is how long the windowed
+        mean latency takes to enter the settle band
+        ``max(settle_abs_us, settle_rel * settled)`` around that value
+        and hold it for ``hold_windows`` consecutive windows (sustained
+        entry, so one noisy window deep in an otherwise-settled regime
+        does not push convergence to the end of the run).  Overshoot is
+        the worst windowed excursion above the settled value; the
+        violation fraction counts windows whose mean latency exceeds
+        ``target_latency_us`` among the windows that actually served
+        traffic; ``rho_rmse`` is the tracking error of the controller's
+        load estimate against the true offered load (NaN without an
+        estimator).
+        """
+        lat = self.mean_latency_us
+        t = self.t_us
+        n = self.n_windows
+        bounds = [0.0] + sorted(float(x) for x in transitions_us
+                                if 0.0 < x < n * self.window_us)
+        bounds_idx = [int(np.searchsorted(t, b, side="left"))
+                      for b in bounds] + [n]
+
+        conv, overshoot = [], 0.0
+        for k in range(len(bounds)):
+            lo, hi = bounds_idx[k], bounds_idx[k + 1]
+            if hi <= lo:
+                if k > 0:
+                    conv.append(float("nan"))
+                continue
+            seg = lat[lo:hi]
+            valid = seg[np.isfinite(seg)]
+            if valid.size == 0:
+                if k > 0:
+                    conv.append(float("nan"))
+                continue
+            tail = valid[-max(valid.size // 3, 1):]
+            settled = float(np.median(tail))
+            band = max(settle_abs_us, settle_rel * settled)
+            overshoot = max(overshoot, float(np.nanmax(seg)) - settled)
+            if k > 0:          # convergence is measured after a transition
+                inside = ~(np.abs(seg - settled) > band)   # NaN => inside
+                # first window from which the metric holds the band for
+                # `hold_windows` consecutive windows (clipped to the
+                # regime length for short regimes)
+                kk = min(max(int(hold_windows), 1), inside.size)
+                streak = (np.convolve(inside.astype(np.int64),
+                                      np.ones(kk, np.int64),
+                                      mode="valid") == kk)
+                idx = int(np.argmax(streak)) if streak.any() else -1
+                conv.append(float(t[lo + idx] + self.window_us
+                                  - bounds[k]) if idx >= 0
+                            else float("nan"))
+
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            # violations are judged over windows that actually served
+            # traffic: NaN (nothing-served) windows would otherwise pad
+            # the denominator and understate violations under schedules
+            # with idle phases
+            fin = lat[np.isfinite(lat)]
+            violation = (float(np.mean(fin > target_latency_us))
+                         if fin.size else 0.0)
+            err = self.rho_est - self.rho_true
+            err = err[np.isfinite(err)]
+            rho_rmse = (float(np.sqrt(np.mean(err ** 2)))
+                        if err.size else float("nan"))
+        conv_t = tuple(conv)
+        finite = [c for c in conv_t if np.isfinite(c)]
+        return TrackingStats(
+            window_us=self.window_us,
+            target_latency_us=float(target_latency_us),
+            transitions_us=tuple(bounds[1:]),
+            convergence_us=conv_t,
+            mean_convergence_us=(float(np.mean(finite)) if finite
+                                 else float("nan")),
+            max_overshoot_us=float(overshoot),
+            violation_fraction=violation,
+            rho_rmse=rho_rmse,
+        )
+
+
+@dataclass(frozen=True)
+class TrackingStats:
+    """How well the closed loop tracked a nonstationary offered load.
+
+    Produced by ``WindowedSeries.tracking`` — the identical computation
+    on every backend — and consumed by ``benchmarks/adaptation.py``'s
+    verdict rows (feed-forward vs pure-Eq-12 convergence, busy-poll's
+    flat CPU)."""
+
+    window_us: float
+    target_latency_us: float
+    transitions_us: tuple        # load-change times the run was cut at
+    convergence_us: tuple        # per transition; NaN = never settled
+    mean_convergence_us: float
+    max_overshoot_us: float      # worst windowed excursion above settled
+    violation_fraction: float    # windows with mean latency > target
+    rho_rmse: float              # EWMA rho vs true rho (NaN: no estimator)
+
+    def summary(self) -> dict:
+        return {
+            "window_us": self.window_us,
+            "target_latency_us": self.target_latency_us,
+            "n_transitions": len(self.transitions_us),
+            "mean_convergence_us": self.mean_convergence_us,
+            "max_overshoot_us": self.max_overshoot_us,
+            "violation_fraction": self.violation_fraction,
+            "rho_rmse": self.rho_rmse,
+        }
+
+
+@dataclass
 class QueueStats:
     """Per-Rx-queue slice of a run's counters.  Every field sums to the
     matching ``RunStats`` total across ``RunStats.per_queue`` (the
@@ -187,6 +418,10 @@ class RunStats:
     backend: str = ""                 # "sim" | "threads" | "server"
     policy: str = ""
     workload: str = ""
+    # nonstationary runs: the LoadSchedule descriptor that modulated the
+    # workload ("" = stationary) — keeps benchmark/JSON rows
+    # self-describing without reaching back to the config object
+    schedule: str = ""
 
     wakeups: int = 0
     cycles: int = 0                   # busy periods won (lock taken)
@@ -228,6 +463,11 @@ class RunStats:
     # backlog until the next wake — nonzero means saturated cycles whose
     # service was deferred, and summary() warns about it
     drain_truncations: int = 0
+
+    # windowed adaptation series (cfg.window_us > 0): filled by BOTH
+    # simulation engines with the same accumulator convention, so
+    # WindowedSeries/TrackingStats are one code path across backends
+    windows: WindowedSeries | None = None
 
     # simulator-only cycle samples and adaptation series
     vacations_us: np.ndarray = field(default_factory=_empty)
@@ -337,7 +577,7 @@ class RunStats:
             setattr(self, f, getattr(self, f) + getattr(other, f))
         self.started_ns = min(self.started_ns, other.started_ns)
         self.stopped_ns = max(self.stopped_ns, other.stopped_ns)
-        for f in ("backend", "policy", "workload"):
+        for f in ("backend", "policy", "workload", "schedule"):
             if getattr(self, f) != getattr(other, f):
                 setattr(self, f, "mixed")
         # latency: sample-based sides merge reservoirs; analytic
@@ -373,6 +613,15 @@ class RunStats:
             self.per_queue.sort(key=lambda q: q.queue)
         elif other.per_queue:
             self.per_queue = copy.deepcopy(other.per_queue)
+        # windowed series: pool accumulators on matching grids, drop on
+        # mismatch (the same convention the binned series follow below)
+        if self.windows is not None and other.windows is not None:
+            try:
+                self.windows.merge(other.windows)
+            except ValueError:
+                self.windows = None
+        elif other.windows is not None:
+            self.windows = copy.deepcopy(other.windows)
         for f in ("vacations_us", "busies_us", "n_v"):
             setattr(self, f, np.concatenate([getattr(self, f),
                                              getattr(other, f)]))
@@ -400,7 +649,8 @@ class RunStats:
                 RuntimeWarning, stacklevel=2)
         return {
             "backend": self.backend, "policy": self.policy,
-            "workload": self.workload, "wakeups": self.wakeups,
+            "workload": self.workload, "schedule": self.schedule,
+            "wakeups": self.wakeups,
             "cycles": self.cycles, "busy_tries": self.busy_tries,
             "serviced": self.items, "offered": self.offered,
             "dropped": self.dropped, "loss_fraction": self.loss_fraction,

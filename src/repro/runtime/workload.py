@@ -19,6 +19,16 @@ on/off phases — bursty edge traffic), and ``TraceReplayWorkload``
 (timestamped trace with ``speedup``/``jitter``, the pcap-sender replay
 model: each inter-arrival gap is divided by ``speedup`` and multiplied
 by a fresh ``1 ± jitter`` factor).
+
+``ScheduledWorkload`` makes any of them *nonstationary*: a
+``repro.runtime.schedule.LoadSchedule`` multiplies the base rate over
+time via time warping — the base process runs on the warped clock
+``W(t) = ∫ scale(u) du``, which for Poisson is exactly the
+inhomogeneous-rate process and for CBR/trace replay the natural
+speed-up/slow-down.  Both window counting (``counts_in``) and real-time
+replay (``iter_arrivals``) are warped, so the event engine, the batched
+engine and the threaded runtime all see the same offered-load
+trajectory.
 """
 
 from __future__ import annotations
@@ -33,6 +43,7 @@ __all__ = [
     "CBRWorkload",
     "OnOffBurstyWorkload",
     "TraceReplayWorkload",
+    "ScheduledWorkload",
 ]
 
 
@@ -291,3 +302,50 @@ class TraceReplayWorkload:
         return (f"TraceReplayWorkload(n={self.trace_us.size}, "
                 f"speedup={self.speedup}, jitter={self.jitter}, "
                 f"loop={self.loop})")
+
+
+class ScheduledWorkload:
+    """Any base workload modulated by a ``LoadSchedule`` — nonstationary
+    traffic through time warping.
+
+    The base process is evaluated on the warped clock ``W(t) =
+    ∫_0^t scale(u) du``: window counts on real ``[t0, t1)`` become base
+    counts on ``[W(t0), W(t1))`` and replayed arrival times map back
+    through ``W^{-1}``.  For a Poisson base this *is* the
+    inhomogeneous Poisson process at rate ``lambda * scale(t)``; for
+    CBR / trace replay it is the piecewise speed change a sender would
+    apply.  The wrapper satisfies the full ``Workload`` protocol, so
+    every backend (event engine, threaded runtime, serving replay)
+    consumes it unchanged.
+    """
+
+    def __init__(self, base: Workload, schedule):
+        self.base = base
+        self.schedule = schedule
+        self.name = (f"{getattr(base, 'name', type(base).__name__)}"
+                     f"@{schedule.descriptor()}")
+
+    def reset(self, rng: np.random.Generator) -> None:
+        self.base.reset(rng)
+
+    def rate_at(self, t_us: float) -> float:
+        return (self.base.rate_at(self.schedule.integral(t_us))
+                * self.schedule.scale_at(t_us))
+
+    def counts_in(self, t0_us: float, t1_us: float) -> int:
+        if t1_us <= t0_us:
+            return 0
+        return self.base.counts_in(self.schedule.integral(t0_us),
+                                   self.schedule.integral(t1_us))
+
+    def iter_arrivals(self, duration_us, rng) -> Iterator[float]:
+        warped_end = self.schedule.integral(duration_us)
+        for u in self.base.iter_arrivals(warped_end, rng):
+            t = self.schedule.inverse_integral(
+                u, hint_until_us=duration_us)
+            if t >= duration_us:
+                return
+            yield float(t)
+
+    def __repr__(self) -> str:
+        return f"ScheduledWorkload({self.base!r}, {self.schedule!r})"

@@ -153,6 +153,57 @@ class Server:
     def stats(self) -> ServerStats:
         return self._runtime.stats
 
+    # -- scheduled replay -------------------------------------------------------
+    def replay(self, workload, *, duration_us: float, schedule=None,
+               make_request=None, seed: int = 0,
+               drain_timeout_s: float = 10.0) -> ServerStats:
+        """Drive the server with a (possibly nonstationary) workload:
+        start, submit one request per ``workload`` arrival at its
+        scheduled wall-clock offset — ``schedule`` (a
+        ``repro.runtime.schedule.LoadSchedule``) modulating the rate
+        exactly as ``SimRunConfig.schedule`` does in simulation — then
+        drain and stop.  ``make_request(i)`` builds the i-th request
+        (default: a tiny 4-token prompt).  The returned stats carry the
+        schedule descriptor, so live serving runs line up with
+        simulated adaptation studies.
+        """
+        import time as _time
+
+        # label with the BASE workload (the simulate_run / Runtime.run
+        # convention): the schedule lands in stats.schedule, so rows
+        # from every backend group by the same workload name
+        base_wl = getattr(workload, "base", workload)
+        workload_label = getattr(base_wl, "name", type(base_wl).__name__)
+        if schedule is not None:
+            from repro.runtime.workload import ScheduledWorkload
+            workload = ScheduledWorkload(workload, schedule)
+        if make_request is None:
+            def make_request(i):
+                return Request(prompt=[1, 2, 3, 4], max_new_tokens=4)
+        rng = np.random.default_rng(seed)
+        self.start()
+        t0 = _time.monotonic_ns()
+        n = 0
+        max_lag_ns = 0
+        for t_us in workload.iter_arrivals(duration_us, rng):
+            gap_ns = t0 + int(t_us * 1e3) - _time.monotonic_ns()
+            if gap_ns > 0:
+                _time.sleep(gap_ns / 1e9)
+            else:
+                max_lag_ns = max(max_lag_ns, -gap_ns)
+            self.submit(make_request(n))
+            n += 1
+        deadline = _time.monotonic() + drain_timeout_s
+        while (any(len(q) for q in self.queues)
+               and _time.monotonic() < deadline):
+            _time.sleep(0.005)
+        st = self.stop()
+        st.workload = workload_label
+        sched = schedule or getattr(workload, "schedule", None)
+        st.schedule = sched.descriptor() if sched is not None else ""
+        st.feeder_lag_us = max_lag_ns / 1e3
+        return st
+
 
 class MetronomeServer(Server):
     """Deprecated alias for ``Server`` + ``MetronomePolicy``."""

@@ -1,0 +1,183 @@
+"""Batched-vs-event parity under *nonstationary* load — the scheduled
+counterpart of the PR 3 (quiet) and PR 4 (interference) parity pins.
+
+Each pinned configuration draws a random static (T_S, T_L, M) operating
+point AND a random load schedule (step / ramp / sinusoid); the batched
+engine evaluates the schedule per slot while the event engine time-warps
+the workload, and the two must agree within the explicit bands below on
+aggregate mean sojourn, CPU fraction, loss, and the windowed offered-
+rate trajectory (which also proves both engines saw the *same*
+schedule).
+
+Documented tolerance bands (scheduled, n_queues=1, peak rho <= 0.85):
+
+  - quiet host: mean sojourn within max(1.5us, 12%); CPU within
+    0.02 + 5%; loss both ~0; per-window offered rate within 8% of the
+    event engine's peak window (observed: ~0.4us / ~3% lat, ~0.004 CPU,
+    ~2% offered);
+  - interference (per-wake delays AND correlated stalls): mean sojourn
+    within max(5.0us, 25%); CPU within 0.025 + 6%; loss within 0.03
+    absolute; offered within 15% of peak (observed: ~3.7us / ~17% lat,
+    ~0.008 CPU, ~8% offered).
+"""
+
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.core import MetronomeConfig
+from repro.runtime import (
+    MetronomePolicy,
+    PoissonWorkload,
+    RampSchedule,
+    SimRunConfig,
+    SinusoidSchedule,
+    StepSchedule,
+    SweepGrid,
+    simulate_batch,
+    simulate_run,
+)
+from repro.runtime.simcore import HR_SLEEP_MODEL
+
+# quiet-host scheduled parity bands
+SLAT_ABS_US, SLAT_REL = 1.5, 0.12
+SCPU_ABS, SCPU_REL = 0.02, 0.05
+SOFF_REL = 0.08
+# interference scheduled parity bands
+ISLAT_ABS_US, ISLAT_REL = 5.0, 0.25
+ISCPU_ABS, ISCPU_REL = 0.025, 0.06
+ISLOSS_ABS = 0.03
+ISOFF_REL = 0.15
+
+INTERFERENCE_ENV = dict(interference_prob=0.25, interference_mean_us=20.0,
+                        stall_rate_per_us=1.0 / 4000.0, stall_mean_us=150.0)
+
+DURATION_US = 100_000.0
+WINDOW_US = 5_000.0
+
+
+def _random_schedule(rng, dur):
+    kind = int(rng.integers(3))
+    lo = float(rng.uniform(0.25, 0.6))
+    hi = float(rng.uniform(1.0, 1.4))
+    if rng.random() < 0.5:
+        lo, hi = hi, lo
+    if kind == 0:
+        return StepSchedule(times_us=(0.0, float(rng.uniform(0.3, 0.7))
+                                      * dur), scales=(lo, hi))
+    if kind == 1:
+        return RampSchedule(t_start_us=float(rng.uniform(0.2, 0.4)) * dur,
+                            t_end_us=float(rng.uniform(0.6, 0.8)) * dur,
+                            scale_from=lo, scale_to=hi)
+    return SinusoidSchedule(period_us=dur / float(rng.integers(2, 6)),
+                            amplitude=float(rng.uniform(0.2, 0.4)),
+                            mean=float(rng.uniform(0.6, 0.9)))
+
+
+def _scheduled_configs(n, seed):
+    rng = np.random.default_rng(seed)
+    pts = []
+    for i in range(n):
+        t_s = float(rng.uniform(5.0, 40.0))
+        sched = _random_schedule(rng, DURATION_US)
+        # keep peak rho <= 0.85 whatever the schedule's max scale is
+        smax = float(np.max(sched.segments(DURATION_US)[1]))
+        rate = float(rng.uniform(0.15, 0.85)) * 29.76 / max(smax, 1.0)
+        pts.append(dict(t_s_us=t_s,
+                        t_l_us=float(t_s * rng.uniform(4.0, 25.0)),
+                        m=int(rng.integers(1, 5)), rate_mpps=rate,
+                        seed=i, schedule=sched))
+    return pts
+
+
+def _event_twin(p, cfg):
+    policy = MetronomePolicy(
+        MetronomeConfig(m=p["m"], v_target_us=p["t_s_us"],
+                        t_long_us=p["t_l_us"],
+                        ts_min_us=min(1.0, p["t_s_us"])),
+        adaptive=False)
+    ecfg = replace(cfg, schedule=p["schedule"])
+    return simulate_run(policy, PoissonWorkload(p["rate_mpps"]), ecfg)
+
+
+def _assert_windows_match(wb, we, off_rel, label):
+    """Both engines must have seen the same offered-load trajectory."""
+    assert wb.n_windows == we.n_windows
+    peak = max(float(we.offered_mpps.max()), 1e-9)
+    diff = np.max(np.abs(wb.offered_mpps - we.offered_mpps))
+    assert diff <= off_rel * peak, (label, diff, peak)
+
+
+@pytest.mark.slow
+def test_scheduled_parity_quiet_12_random_configs():
+    """>= 12 random (static point x schedule) configs on a quiet host:
+    batched and event engines agree within the scheduled quiet bands,
+    and their windowed offered-rate series coincide."""
+    pts = _scheduled_configs(n=12, seed=42)
+    cfg = SimRunConfig(duration_us=DURATION_US, sleep_model=HR_SLEEP_MODEL,
+                       window_us=WINDOW_US)
+    bs = simulate_batch(SweepGrid.of_points(pts), cfg, slot_us=0.5)
+    assert {p["schedule"].name for p in pts} >= {"step", "ramp",
+                                                 "sinusoid"}
+    for i, p in enumerate(pts):
+        rs = _event_twin(p, cfg)
+        lat_b, lat_e = float(bs.mean_latency_us[i]), rs.mean_sojourn_us
+        cpu_b, cpu_e = float(bs.cpu_fraction[i]), rs.cpu_fraction
+        assert abs(lat_b - lat_e) <= max(SLAT_ABS_US, SLAT_REL * lat_e), \
+            (p, lat_b, lat_e)
+        assert abs(cpu_b - cpu_e) <= SCPU_ABS + SCPU_REL * cpu_e, \
+            (p, cpu_b, cpu_e)
+        assert float(bs.loss_fraction[i]) < 1e-3
+        assert rs.loss_fraction < 1e-3
+        _assert_windows_match(bs.windows(i), rs.windows, SOFF_REL, p)
+        # the shared TrackingStats path runs on both backends' series
+        trans = p["schedule"].transitions(DURATION_US)
+        tb = bs.windows(i).tracking(trans, 1e9)
+        te = rs.windows.tracking(trans, 1e9)
+        assert tb.violation_fraction == te.violation_fraction == 0.0
+
+
+@pytest.mark.slow
+def test_scheduled_parity_interference_10_random_configs():
+    """>= 10 random scheduled configs on a noisy shared host (per-wake
+    interference AND correlated stalls): agreement within the widened
+    scheduled interference bands."""
+    pts = _scheduled_configs(n=10, seed=7)
+    cfg = SimRunConfig(duration_us=DURATION_US, sleep_model=HR_SLEEP_MODEL,
+                       window_us=WINDOW_US, **INTERFERENCE_ENV)
+    assert cfg.is_noisy
+    bs = simulate_batch(SweepGrid.of_points(pts), cfg, slot_us=0.5)
+    for i, p in enumerate(pts):
+        rs = _event_twin(p, cfg)
+        lat_b, lat_e = float(bs.mean_latency_us[i]), rs.mean_sojourn_us
+        cpu_b, cpu_e = float(bs.cpu_fraction[i]), rs.cpu_fraction
+        assert abs(lat_b - lat_e) <= max(ISLAT_ABS_US, ISLAT_REL * lat_e), \
+            (p, lat_b, lat_e)
+        assert abs(cpu_b - cpu_e) <= ISCPU_ABS + ISCPU_REL * cpu_e, \
+            (p, cpu_b, cpu_e)
+        assert abs(float(bs.loss_fraction[i]) - rs.loss_fraction) \
+            <= ISLOSS_ABS, (p, float(bs.loss_fraction[i]),
+                            rs.loss_fraction)
+        _assert_windows_match(bs.windows(i), rs.windows, ISOFF_REL, p)
+
+
+def test_scheduled_parity_smoke_two_configs():
+    """Tier-1 guard: a tiny scheduled batched-vs-event comparison (wide
+    bands) so the scheduled code path cannot silently break between
+    slow-tier runs."""
+    dur = 30_000.0
+    sched = StepSchedule(times_us=(0.0, 15_000.0), scales=(0.5, 1.2))
+    pts = [dict(t_s_us=12.0, t_l_us=300.0, m=3, rate_mpps=0.5 * 29.76,
+                seed=0, schedule=sched),
+           dict(t_s_us=20.0, t_l_us=400.0, m=2, rate_mpps=0.4 * 29.76,
+                seed=1, schedule=sched)]
+    cfg = SimRunConfig(duration_us=dur, window_us=3_000.0)
+    bs = simulate_batch(SweepGrid.of_points(pts), cfg, slot_us=1.0)
+    for i, p in enumerate(pts):
+        rs = _event_twin(p, cfg)
+        lat_b, lat_e = float(bs.mean_latency_us[i]), rs.mean_sojourn_us
+        assert abs(lat_b - lat_e) <= max(3.0, 0.25 * lat_e)
+        assert abs(float(bs.cpu_fraction[i]) - rs.cpu_fraction) \
+            <= 0.03 + 0.08 * rs.cpu_fraction
+        _assert_windows_match(bs.windows(i), rs.windows, 0.15, p)

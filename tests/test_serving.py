@@ -202,3 +202,26 @@ def test_server_affinity_routes_same_key_to_same_queue():
     occupied = [len(q) for q in srv.queues]
     assert sum(occupied) == 8
     assert max(occupied) == 8    # all eight in a single queue
+
+
+def test_server_replay_schedules_a_nonstationary_request_stream():
+    """Server.replay drives live serving from a Workload x LoadSchedule
+    pair: everything submitted is served, and the stats carry the
+    schedule descriptor so live runs line up with simulated ones."""
+    from repro.runtime import MetronomePolicy, PoissonWorkload, StepSchedule
+    from repro.serving import Server
+
+    eng = _make_engine()
+    srv = Server(eng, MetronomePolicy(MetronomeConfig(
+        m=2, v_target_us=1_000.0, t_long_us=20_000.0)))
+    # ~60 requests over 0.3s, rate stepping up 3x halfway through
+    sched = StepSchedule(times_us=(0.0, 150_000.0), scales=(0.5, 1.5))
+    stats = srv.replay(
+        PoissonWorkload(0.0002), duration_us=300_000.0, schedule=sched,
+        make_request=lambda i: Request(prompt=[1, 2, 3], max_new_tokens=2))
+    assert stats.backend == "server"
+    assert stats.schedule.startswith("step[")
+    assert stats.workload.startswith("poisson")
+    assert stats.offered > 0
+    assert stats.items == stats.offered - stats.dropped
+    assert stats.dropped == 0

@@ -1,0 +1,192 @@
+"""Property tests for the weighted-union merges on ``Reservoir`` /
+``QueueStats`` / ``RunStats`` — the invariants the sharded-sweep
+machinery silently relies on (counts conserved, merged quantiles
+bounded by the inputs' extremes, distributional order-insensitivity at
+a fixed seed), which until now were only example-tested."""
+
+import copy
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis not installed in this environment")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.runtime.stats import QueueStats, Reservoir, RunStats
+
+floats_us = st.floats(min_value=0.0, max_value=1e6,
+                      allow_nan=False, allow_infinity=False)
+value_lists = st.lists(floats_us, min_size=0, max_size=200)
+small_caps = st.integers(min_value=1, max_value=64)
+
+
+def _reservoir(values, capacity=32, seed=0):
+    r = Reservoir(capacity, seed=seed)
+    r.extend(list(values))
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Reservoir.merge
+# ---------------------------------------------------------------------------
+
+@given(a=value_lists, b=value_lists, cap=small_caps)
+@settings(max_examples=60, deadline=None)
+def test_reservoir_merge_conserves_count_and_bounds_buffer(a, b, cap):
+    ra, rb = _reservoir(a, cap), _reservoir(b, cap)
+    merged = ra.merge(rb)
+    assert merged is ra
+    # counts conserved: merged stream length = sum of input streams
+    assert merged.count == len(a) + len(b)
+    # buffer never exceeds capacity, and is as full as possible
+    assert len(merged) <= cap
+    assert len(merged) == min(cap, len(a) + len(b))
+
+
+@given(a=value_lists, b=value_lists, cap=small_caps)
+@settings(max_examples=60, deadline=None)
+def test_reservoir_merge_quantiles_bounded_by_input_extremes(a, b, cap):
+    ra, rb = _reservoir(a, cap), _reservoir(b, cap)
+    pool = list(ra) + list(rb)          # survivors before the union
+    ra.merge(rb)
+    if not pool:
+        assert len(ra) == 0
+        return
+    lo, hi = min(pool), max(pool)
+    arr = np.asarray(ra)
+    assert arr.size > 0
+    # every merged sample (hence every quantile of the merged buffer)
+    # comes from one of the input buffers
+    assert float(arr.min()) >= lo - 1e-12
+    assert float(arr.max()) <= hi + 1e-12
+    for q in (1, 50, 99):
+        v = float(np.percentile(arr, q))
+        assert lo - 1e-12 <= v <= hi + 1e-12
+
+
+@given(a=value_lists, b=value_lists, cap=small_caps,
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_reservoir_merge_order_insensitive_in_distribution(a, b, cap, seed):
+    """At a fixed seed, A.merge(B) and B.merge(A) need not be the same
+    buffer — but they must describe the same pooled stream: identical
+    total counts, buffer sizes, and (when nothing was evicted anywhere)
+    identical sample *sets*."""
+    ab = _reservoir(a, cap, seed).merge(_reservoir(b, cap, seed))
+    ba = _reservoir(b, cap, seed).merge(_reservoir(a, cap, seed))
+    assert ab.count == ba.count == len(a) + len(b)
+    assert len(ab) == len(ba)
+    if len(a) + len(b) <= cap:
+        # lossless regime: the union is exact in both orders
+        assert sorted(ab) == sorted(ba) == sorted(list(a) + list(b))
+    else:
+        # lossy regime: both are samples of the same pool
+        pool = set()
+        pool.update(_reservoir(a, cap, seed))
+        pool.update(_reservoir(b, cap, seed))
+        assert set(ab) <= set(a) | set(b)
+        assert set(ba) <= set(a) | set(b)
+
+
+@given(vals=st.lists(floats_us, min_size=1, max_size=120), cap=small_caps)
+@settings(max_examples=40, deadline=None)
+def test_reservoir_merge_empty_is_identity(vals, cap):
+    r = _reservoir(vals, cap)
+    before_buf, before_count = list(r), r.count
+    r.merge(Reservoir(cap, seed=9))
+    assert list(r) == before_buf and r.count == before_count
+
+
+# ---------------------------------------------------------------------------
+# QueueStats.merge
+# ---------------------------------------------------------------------------
+
+counter = st.integers(min_value=0, max_value=10**9)
+
+
+@given(o1=counter, d1=counter, s1=counter, b1=counter, c1=counter,
+       o2=counter, d2=counter, s2=counter, b2=counter, c2=counter,
+       lat1=value_lists, lat2=value_lists)
+@settings(max_examples=50, deadline=None)
+def test_queue_stats_merge_adds_every_counter(o1, d1, s1, b1, c1,
+                                              o2, d2, s2, b2, c2,
+                                              lat1, lat2):
+    qa = QueueStats(queue=0, offered=o1, dropped=d1, serviced=s1,
+                    busy_tries=b1, cycles=c1,
+                    latency_us=_reservoir(lat1, 16))
+    qb = QueueStats(queue=0, offered=o2, dropped=d2, serviced=s2,
+                    busy_tries=b2, cycles=c2,
+                    latency_us=_reservoir(lat2, 16))
+    qa.merge(qb)
+    assert qa.offered == o1 + o2
+    assert qa.dropped == d1 + d2
+    assert qa.serviced == s1 + s2
+    assert qa.busy_tries == b1 + b2
+    assert qa.cycles == c1 + c2
+    assert qa.latency_us.count == len(lat1) + len(lat2)
+    # the donor is unchanged
+    assert qb.offered == o2 and qb.latency_us.count == len(lat2)
+
+
+# ---------------------------------------------------------------------------
+# RunStats.merge
+# ---------------------------------------------------------------------------
+
+def _run_stats(offered, dropped, items, awake_ns, lat, *, n_queues=2,
+               seed=0):
+    rs = RunStats(backend="sim", policy="p", workload="w",
+                  wakeups=offered % 97, cycles=items % 89,
+                  busy_tries=dropped % 83, items=items, offered=offered,
+                  dropped=dropped, awake_ns=awake_ns, started_ns=0,
+                  stopped_ns=10**9,
+                  latency_us=_reservoir(lat, 32, seed))
+    rs.per_queue = [
+        QueueStats(queue=q, offered=offered // n_queues,
+                   dropped=dropped // n_queues,
+                   serviced=items // n_queues,
+                   latency_us=_reservoir(lat[q::n_queues], 16, seed + q))
+        for q in range(n_queues)
+    ]
+    return rs
+
+
+@given(o1=counter, d1=counter, i1=counter, a1=counter,
+       o2=counter, d2=counter, i2=counter, a2=counter,
+       lat1=value_lists, lat2=value_lists)
+@settings(max_examples=40, deadline=None)
+def test_run_stats_merge_conserves_counters_and_reservoirs(
+        o1, d1, i1, a1, o2, d2, i2, a2, lat1, lat2):
+    ra = _run_stats(o1, d1, i1, a1, lat1)
+    rb = _run_stats(o2, d2, i2, a2, lat2, seed=1)
+    rb_snapshot = copy.deepcopy(rb)
+    ra.merge(rb)
+    assert ra.offered == o1 + o2
+    assert ra.dropped == d1 + d2
+    assert ra.items == i1 + i2
+    assert ra.awake_ns == a1 + a2
+    assert ra.latency_us.count == len(lat1) + len(lat2)
+    # per-queue slices merged by index, conserving their sums
+    assert len(ra.per_queue) == 2
+    for q in range(2):
+        assert ra.per_queue[q].offered == (o1 // 2) + (o2 // 2)
+    # the donor was not mutated (merge adopts copies of its slices)
+    for q in range(2):
+        assert rb.per_queue[q].offered == rb_snapshot.per_queue[q].offered
+        assert (rb.per_queue[q].latency_us.count
+                == rb_snapshot.per_queue[q].latency_us.count)
+
+
+@given(lat=st.lists(floats_us, min_size=2, max_size=100))
+@settings(max_examples=30, deadline=None)
+def test_run_stats_merged_latency_quantiles_bounded(lat):
+    half = len(lat) // 2
+    ra = _run_stats(10, 0, 5, 100, lat[:half])
+    rb = _run_stats(10, 0, 5, 100, lat[half:], seed=1)
+    lo, hi = min(lat), max(lat)
+    ra.merge(rb)
+    arr = np.asarray(ra.latency_us)
+    if arr.size:
+        assert float(np.percentile(arr, 99)) <= hi + 1e-12
+        assert float(np.percentile(arr, 1)) >= lo - 1e-12
