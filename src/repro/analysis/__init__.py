@@ -1,0 +1,46 @@
+"""Project-specific static analysis: the repo's own invariants as a gate.
+
+Four AST-based passes over the codebase (``python -m repro.analysis``):
+
+  - ``units``          — _us/_ns suffix discipline (UNITS001/002)
+  - ``engine-parity``  — SimRunConfig fields vs the batched engine
+                         (PARITY001/002)
+  - ``scan-purity``    — lax.scan/jit/vmap body hygiene (SCAN001–004)
+  - ``lock-discipline``— TryLock/threading.Lock rules (LOCK001–003)
+
+Stdlib-only (``ast`` + ``json``): importable and runnable without jax,
+so the CI gate costs seconds.  See ``repro.analysis.core`` for the
+framework and ``analysis_baseline.json`` for grandfathered findings.
+"""
+
+from .core import (
+    AnalysisPass,
+    AnalysisResult,
+    Baseline,
+    Finding,
+    SourceFile,
+    collect_files,
+    register,
+    registered_passes,
+    run_analysis,
+)
+from .locks import LockDisciplinePass
+from .parity import EngineParityPass
+from .scanpurity import ScanPurityPass
+from .units import UnitsPass
+
+__all__ = [
+    "AnalysisPass",
+    "AnalysisResult",
+    "Baseline",
+    "Finding",
+    "SourceFile",
+    "collect_files",
+    "register",
+    "registered_passes",
+    "run_analysis",
+    "UnitsPass",
+    "EngineParityPass",
+    "ScanPurityPass",
+    "LockDisciplinePass",
+]

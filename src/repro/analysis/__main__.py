@@ -1,0 +1,104 @@
+"""CLI for the project static-analysis suite.
+
+    python -m repro.analysis [--paths P ...] [--baseline FILE]
+                             [--format text|json] [--update-baseline]
+                             [--list-rules]
+
+Exit status: 0 when every finding is grandfathered by the baseline (or
+there are none), 1 when new findings exist, 2 on usage errors.  Default
+scope is ``src/repro``; the baseline default is
+``analysis_baseline.json`` next to the repo root (located by walking up
+from this file), so the command works from any CWD.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .core import Baseline, registered_passes, run_analysis
+
+
+def _repo_root() -> Path:
+    """The checkout root: the directory holding ``src/``."""
+    here = Path(__file__).resolve()
+    for parent in here.parents:
+        if (parent / "src" / "repro").is_dir():
+            return parent
+    return Path.cwd()
+
+
+def main(argv: list[str] | None = None) -> int:
+    root = _repo_root()
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="project-specific static analysis "
+                    "(units / engine-parity / scan-purity / "
+                    "lock-discipline)")
+    ap.add_argument("--paths", nargs="*", default=None,
+                    help="files or directories to scan "
+                         "(default: src/repro)")
+    ap.add_argument("--baseline", default=str(root /
+                                              "analysis_baseline.json"),
+                    help="grandfathered-findings JSON (default: "
+                         "analysis_baseline.json at the repo root)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline file to grandfather "
+                         "every current finding, then exit 0")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for ps in registered_passes():
+            print(f"{ps.name}:")
+            for rid, desc in ps.rules.items():
+                print(f"  {rid}: {desc}")
+        return 0
+
+    paths = ([Path(p) for p in args.paths] if args.paths
+             else [root / "src" / "repro"])
+    for p in paths:
+        if not p.exists():
+            print(f"error: no such path: {p}", file=sys.stderr)
+            return 2
+
+    baseline_path = Path(args.baseline)
+    try:
+        baseline = Baseline.load(baseline_path)
+    except (ValueError, KeyError, TypeError, OSError) as e:
+        print(f"error: unreadable baseline {baseline_path}: {e}",
+              file=sys.stderr)
+        return 2
+    result = run_analysis(paths, root=root, baseline=baseline)
+
+    if args.update_baseline:
+        Baseline.from_findings(result.findings).save(baseline_path)
+        print(f"baseline updated: {len(result.findings)} finding(s) "
+              f"grandfathered in {baseline_path}")
+        return 0
+
+    if args.format == "json":
+        print(json.dumps({
+            "schema": "repro-analysis/1",
+            "files_scanned": len(result.files),
+            "new": [f.to_json() for f in result.new],
+            "grandfathered": [f.to_json()
+                              for f in result.grandfathered],
+            "ok": result.ok,
+        }, indent=2))
+    else:
+        for f in result.new:
+            print(f.format())
+        for f in result.grandfathered:
+            print(f"{f.format()}  [baselined]")
+        print(f"{len(result.files)} file(s) scanned: "
+              f"{len(result.new)} new finding(s), "
+              f"{len(result.grandfathered)} baselined")
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

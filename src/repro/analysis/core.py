@@ -1,0 +1,221 @@
+"""Framework for the project-specific static-analysis suite.
+
+Generic linters can't see this repo's invariants: microsecond vs
+nanosecond naming discipline, the two simulation engines that must stay
+field-for-field in sync, ``lax.scan`` bodies that must stay pure and
+un-shadowed, and the ``TryLock``/``threading.Lock`` discipline the
+threaded ``Runtime`` depends on.  Each of those is an AST-checkable
+property; this module provides the shared machinery:
+
+  - ``SourceFile``: a parsed file handed to every pass;
+  - ``Finding``: one diagnostic with a stable ``fingerprint`` (rule +
+    path + message — deliberately line-free, so baselines survive
+    unrelated edits);
+  - ``AnalysisPass``: the pass protocol plus the ``@register`` registry;
+  - ``Baseline``: a JSON-persistable multiset of grandfathered
+    fingerprints (``analysis_baseline.json``) — findings matched by the
+    baseline are reported but don't gate; *new* findings fail the run;
+  - ``run_analysis``: collect files, run every registered pass, split
+    findings into new vs baselined.
+
+The suite is stdlib-only on purpose (``ast`` + ``json``): the CI gate
+must run in seconds on a bare Python, before any jax install.
+"""
+
+from __future__ import annotations
+
+import ast
+import hashlib
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+
+__all__ = [
+    "SourceFile",
+    "Finding",
+    "AnalysisPass",
+    "Baseline",
+    "AnalysisResult",
+    "register",
+    "registered_passes",
+    "collect_files",
+    "run_analysis",
+]
+
+ERROR = "error"
+WARNING = "warning"
+
+
+@dataclass(frozen=True)
+class SourceFile:
+    """One parsed input: absolute path, repo-relative posix path (the
+    identity used in findings and baselines), source text, AST."""
+
+    path: Path
+    rel: str
+    text: str
+    tree: ast.Module
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str                # e.g. "UNITS001"
+    severity: str            # "error" | "warning"
+    path: str                # repo-relative posix path
+    line: int
+    col: int
+    message: str
+
+    @property
+    def fingerprint(self) -> str:
+        """Stable identity for baseline matching.  Excludes line/col so
+        grandfathered findings survive edits elsewhere in the file; the
+        message must therefore not embed line numbers (pass authors'
+        contract)."""
+        raw = f"{self.rule}|{self.path}|{self.message}"
+        return hashlib.sha1(raw.encode()).hexdigest()[:16]
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.rule} [{self.severity}] {self.message}")
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "severity": self.severity,
+                "path": self.path, "line": self.line, "col": self.col,
+                "message": self.message, "fingerprint": self.fingerprint}
+
+
+class AnalysisPass:
+    """One analysis: ``run`` sees every collected file at once (passes
+    like engine-parity correlate across files).  Subclasses set ``name``
+    and ``rules`` (rule id -> one-line description, surfaced by
+    ``--list-rules`` and the README)."""
+
+    name: str = ""
+    rules: dict[str, str] = {}
+
+    def run(self, files: list[SourceFile]) -> list[Finding]:
+        raise NotImplementedError
+
+
+_REGISTRY: list[AnalysisPass] = []
+
+
+def register(cls):
+    """Class decorator: instantiate and add to the global pass list."""
+    _REGISTRY.append(cls())
+    return cls
+
+
+def registered_passes() -> list[AnalysisPass]:
+    # import for side effect: each pass module registers itself
+    from . import locks, parity, scanpurity, units  # noqa: F401
+    return list(_REGISTRY)
+
+
+@dataclass
+class Baseline:
+    """Grandfathered findings as a fingerprint multiset.  Multiset (not
+    set) semantics: if the baseline holds two findings with one
+    fingerprint and a third identical one appears, the third is new."""
+
+    counts: dict[str, int] = field(default_factory=dict)
+    entries: list[dict] = field(default_factory=list)
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        if not path.exists():
+            return cls()
+        data = json.loads(path.read_text())
+        entries = data.get("findings", [])
+        counts: dict[str, int] = {}
+        for e in entries:
+            fp = e["fingerprint"]
+            counts[fp] = counts.get(fp, 0) + 1
+        return cls(counts=counts, entries=entries)
+
+    @classmethod
+    def from_findings(cls, findings: list[Finding]) -> "Baseline":
+        entries = [f.to_json() for f in findings]
+        counts: dict[str, int] = {}
+        for f in findings:
+            counts[f.fingerprint] = counts.get(f.fingerprint, 0) + 1
+        return cls(counts=counts, entries=entries)
+
+    def save(self, path: Path) -> None:
+        payload = {
+            "schema": "repro-analysis-baseline/1",
+            "note": ("Grandfathered static-analysis findings. "
+                     "Refresh with: python -m repro.analysis "
+                     "--update-baseline.  New findings (not listed "
+                     "here) fail the run."),
+            "findings": sorted(self.entries,
+                               key=lambda e: (e["path"], e["rule"],
+                                              e["line"])),
+        }
+        path.write_text(json.dumps(payload, indent=2) + "\n")
+
+    def split(self, findings: list[Finding]
+              ) -> tuple[list[Finding], list[Finding]]:
+        """(new, grandfathered) under multiset matching."""
+        budget = dict(self.counts)
+        new, old = [], []
+        for f in findings:
+            if budget.get(f.fingerprint, 0) > 0:
+                budget[f.fingerprint] -= 1
+                old.append(f)
+            else:
+                new.append(f)
+        return new, old
+
+
+@dataclass
+class AnalysisResult:
+    files: list[SourceFile]
+    findings: list[Finding]          # everything, sorted
+    new: list[Finding]               # not covered by the baseline
+    grandfathered: list[Finding]
+
+    @property
+    def ok(self) -> bool:
+        return not self.new
+
+
+def collect_files(paths: list[Path], root: Path) -> list[SourceFile]:
+    """Expand files/directories into parsed ``SourceFile``s.  Files that
+    fail to parse are skipped — syntax errors are the compiler's job,
+    not this suite's (and CI's test job would already be red)."""
+    seen: set[Path] = set()
+    out: list[SourceFile] = []
+    for p in paths:
+        p = p.resolve()
+        candidates = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in candidates:
+            if f in seen or f.suffix != ".py":
+                continue
+            seen.add(f)
+            try:
+                text = f.read_text()
+                tree = ast.parse(text, filename=str(f))
+            except (SyntaxError, UnicodeDecodeError, OSError):
+                continue
+            try:
+                rel = f.relative_to(root).as_posix()
+            except ValueError:
+                rel = f.as_posix()
+            out.append(SourceFile(path=f, rel=rel, text=text, tree=tree))
+    return out
+
+
+def run_analysis(paths: list[Path], *, root: Path,
+                 baseline: Baseline | None = None,
+                 passes: list[AnalysisPass] | None = None
+                 ) -> AnalysisResult:
+    files = collect_files(paths, root)
+    findings: list[Finding] = []
+    for ps in (passes if passes is not None else registered_passes()):
+        findings.extend(ps.run(files))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    new, old = (baseline or Baseline()).split(findings)
+    return AnalysisResult(files=files, findings=findings,
+                          new=new, grandfathered=old)

@@ -1,0 +1,381 @@
+"""Lock-discipline pass: the threaded runtime's TryLock/Lock rules.
+
+The paper's retrieval loop is built on a *non-blocking* queue ownership
+lock (``TryLock``) plus a short-critical-section ``threading.Lock`` for
+shared stats.  Three machine-checkable rules keep that structure honest
+as the runtime grows:
+
+  - **LOCK001** — a cycle in the lock-acquisition graph: lock B is
+    blocking-acquired while holding A in one place and A while holding
+    B in another (including the self-loop: re-acquiring a held
+    non-reentrant lock).  Edges are collected across *all* scanned
+    files, so the graph spans ``runtime.py`` / ``queues.py`` /
+    ``assignment.py`` / ``core/trylock.py`` and whatever else acquires
+    locks.
+  - **LOCK002** — a *blocking* acquisition (``with lock:`` or
+    ``lock.acquire()``) while holding a ``TryLock``: the entire point
+    of try-lock retrieval is that a poller never blocks while it owns a
+    queue — a blocked owner stalls every producer and defeats the
+    paper's Listing-2 loop shape.
+  - **LOCK003** — a write to stats state outside its guard lock.  The
+    protected set is *derived*, not declared: any object mutated inside
+    a ``with self._stats_lock:`` block anywhere in the class (through
+    aliases like ``st = self.stats``) is stats-family; mutating it
+    elsewhere without the guard races the poller threads.  Lifecycle
+    methods (``__init__``/``start``/``stop``/``reset``/``close``) are
+    exempt — they run while the threads are quiescent.
+
+The analysis is intra-procedural by design: cross-function holds (e.g.
+a callback invoked under a lock) are invisible to it.  Locks are
+identified by their attribute name (``q.lock`` and ``self.lock`` are
+one graph node, ``lock``), which matches how this codebase names its
+locks one-class-per-role.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+
+from .core import ERROR, AnalysisPass, Finding, SourceFile, register
+
+__all__ = ["LockDisciplinePass"]
+
+_EXEMPT_METHODS = {"__init__", "start", "stop", "reset", "close",
+                   "__enter__", "__exit__"}
+_MUTATORS = {"append", "extend", "insert", "add", "update", "pop",
+             "popitem", "remove", "discard", "clear", "setdefault",
+             "sort", "reverse"}
+
+
+def _dotted(node: ast.AST) -> str | None:
+    parts: list[str] = []
+    while True:
+        if isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        elif isinstance(node, ast.Subscript):
+            parts.append("[]")
+            node = node.value
+        elif isinstance(node, ast.Name):
+            parts.append(node.id)
+            return ".".join(reversed(parts))
+        else:
+            return None
+
+
+def _lock_key(expr: ast.AST) -> str | None:
+    """Graph-node name for a lock expression: its last attribute
+    segment, if it smells like a lock."""
+    d = _dotted(expr)
+    if d is None:
+        return None
+    last = d.split(".")[-1]
+    if last == "[]" and len(d.split(".")) >= 2:
+        last = d.split(".")[-2]
+    low = last.lower()
+    if "lock" in low or "mutex" in low:
+        return last
+    return None
+
+
+@dataclass(frozen=True)
+class _Edge:
+    held: str
+    acquired: str
+    path: str
+    line: int
+
+
+@dataclass(frozen=True)
+class _Held:
+    key: str
+    blocking: bool       # False: TryLock / acquire(blocking=False)
+
+
+def _is_blocking_acquire(call: ast.Call) -> str | None:
+    """Lock key if ``call`` is a blocking ``<lock>.acquire(...)``."""
+    if not (isinstance(call.func, ast.Attribute)
+            and call.func.attr == "acquire"):
+        return None
+    for kw in call.keywords:
+        if (kw.arg == "blocking"
+                and isinstance(kw.value, ast.Constant)
+                and kw.value.value is False):
+            return None
+    if call.args and isinstance(call.args[0], ast.Constant) \
+            and call.args[0].value is False:
+        return None
+    return _lock_key(call.func.value)
+
+
+def _is_try_acquire(call: ast.Call) -> str | None:
+    if isinstance(call.func, ast.Attribute):
+        if call.func.attr == "try_acquire":
+            return _lock_key(call.func.value) or \
+                _dotted(call.func.value).split(".")[-1]
+        if call.func.attr == "acquire":
+            key = _lock_key(call.func.value)
+            if key and _is_blocking_acquire(call) is None:
+                return key
+    return None
+
+
+class _FunctionScanner:
+    """Walk one function's statements tracking held locks, emitting
+    acquisition edges and LOCK002 violations."""
+
+    def __init__(self, sf: SourceFile):
+        self.sf = sf
+        self.edges: list[_Edge] = []
+        self.findings: list[Finding] = []
+        # (key, line) of every blocking acquisition, for LOCK003 reuse
+        self.with_regions: list[tuple[str, ast.With]] = []
+
+    def scan(self, fn: ast.FunctionDef) -> None:
+        self._stmts(fn.body, [])
+
+    # -- helpers ---------------------------------------------------------------
+    def _acquire(self, key: str, blocking: bool, node: ast.AST,
+                 held: list[_Held]) -> None:
+        for h in held:
+            if blocking:
+                self.edges.append(_Edge(h.key, key, self.sf.rel,
+                                        node.lineno))
+            if blocking and not h.blocking:
+                self.findings.append(Finding(
+                    rule="LOCK002", severity=ERROR, path=self.sf.rel,
+                    line=node.lineno, col=node.col_offset,
+                    message=(f"blocking acquisition of '{key}' while "
+                             f"holding TryLock '{h.key}': a queue "
+                             "owner must never block")))
+
+    def _stmts(self, stmts: list[ast.stmt], held: list[_Held]) -> None:
+        held = list(held)
+        for st in stmts:
+            # release() of a held lock ends its hold for what follows
+            if (isinstance(st, ast.Expr)
+                    and isinstance(st.value, ast.Call)
+                    and isinstance(st.value.func, ast.Attribute)
+                    and st.value.func.attr == "release"):
+                key = _lock_key(st.value.func.value)
+                if key:
+                    held = [h for h in held if h.key != key]
+                continue
+            if isinstance(st, ast.With):
+                inner = list(held)
+                for item in st.items:
+                    key = _lock_key(item.context_expr)
+                    if key:
+                        self._acquire(key, True, st, inner)
+                        inner.append(_Held(key, True))
+                        self.with_regions.append((key, st))
+                self._stmts(st.body, inner)
+                continue
+            if isinstance(st, ast.If):
+                key = self._try_acquire_test(st.test)
+                if key:
+                    self._stmts(st.body, held + [_Held(key, False)])
+                    self._stmts(st.orelse, held)
+                    continue
+                nkey = self._not_try_acquire_test(st.test)
+                if nkey and st.body and isinstance(
+                        st.body[-1], (ast.Return, ast.Raise,
+                                      ast.Continue, ast.Break)):
+                    # `if not lock.acquire(blocking=False): return`
+                    # guards the rest of the block: held from here on
+                    self._stmts(st.body, held)
+                    held.append(_Held(nkey, False))
+                    continue
+                self._stmts(st.body, held)
+                self._stmts(st.orelse, held)
+                continue
+            if isinstance(st, (ast.For, ast.AsyncFor)):
+                self._stmts(st.body, held)
+                self._stmts(st.orelse, held)
+                continue
+            if isinstance(st, ast.While):
+                self._stmts(st.body, held)
+                self._stmts(st.orelse, held)
+                continue
+            if isinstance(st, ast.Try):
+                self._stmts(st.body, held)
+                for h in st.handlers:
+                    self._stmts(h.body, held)
+                self._stmts(st.orelse, held)
+                self._stmts(st.finalbody, held)
+                continue
+            # plain statement: blocking .acquire() starts a hold for
+            # the remainder of this block
+            for node in ast.walk(st):
+                if isinstance(node, ast.Call):
+                    bkey = _is_blocking_acquire(node)
+                    if bkey:
+                        self._acquire(bkey, True, node, held)
+                        held.append(_Held(bkey, True))
+
+    @staticmethod
+    def _try_acquire_test(test: ast.AST) -> str | None:
+        if isinstance(test, ast.Call):
+            return _is_try_acquire(test)
+        return None
+
+    @staticmethod
+    def _not_try_acquire_test(test: ast.AST) -> str | None:
+        if (isinstance(test, ast.UnaryOp)
+                and isinstance(test.op, ast.Not)
+                and isinstance(test.operand, ast.Call)):
+            call = test.operand
+            if _is_try_acquire(call):
+                return _is_try_acquire(call)
+            if (isinstance(call.func, ast.Attribute)
+                    and call.func.attr == "acquire"
+                    and _is_blocking_acquire(call) is None):
+                return _lock_key(call.func.value)
+        return None
+
+
+@register
+class LockDisciplinePass(AnalysisPass):
+    name = "lock-discipline"
+    rules = {
+        "LOCK001": ("cycle in the lock-acquisition graph (potential "
+                    "deadlock)"),
+        "LOCK002": ("blocking lock acquisition while holding a "
+                    "TryLock"),
+        "LOCK003": ("write to stats-family state outside its "
+                    "_stats_lock guard"),
+    }
+
+    def run(self, files: list[SourceFile]) -> list[Finding]:
+        findings: list[Finding] = []
+        edges: list[_Edge] = []
+        for sf in files:
+            for node in ast.walk(sf.tree):
+                if isinstance(node, ast.FunctionDef):
+                    sc = _FunctionScanner(sf)
+                    sc.scan(node)
+                    findings.extend(sc.findings)
+                    edges.extend(sc.edges)
+            for node in ast.walk(sf.tree):
+                if isinstance(node, ast.ClassDef):
+                    findings.extend(_check_stats_guard(sf, node))
+        findings.extend(_find_cycles(edges))
+        return findings
+
+
+def _find_cycles(edges: list[_Edge]) -> list[Finding]:
+    graph: dict[str, dict[str, _Edge]] = {}
+    for e in edges:
+        graph.setdefault(e.held, {}).setdefault(e.acquired, e)
+    out: list[Finding] = []
+    reported: set[frozenset] = set()
+    for start in sorted(graph):
+        stack = [(start, [start])]
+        while stack:
+            node, path = stack.pop()
+            for nxt in sorted(graph.get(node, {})):
+                if nxt == start:
+                    cyc = frozenset(path)
+                    if cyc in reported:
+                        continue
+                    reported.add(cyc)
+                    e = graph[node][nxt]
+                    chain = " -> ".join(path + [start])
+                    out.append(Finding(
+                        rule="LOCK001", severity=ERROR, path=e.path,
+                        line=e.line, col=0,
+                        message=(f"lock-acquisition cycle: {chain} "
+                                 "(deadlock when the acquisitions "
+                                 "interleave)")))
+                elif nxt not in path:
+                    stack.append((nxt, path + [nxt]))
+    return out
+
+
+def _guard_lock_name(cls: ast.ClassDef) -> str | None:
+    for node in ast.walk(cls):
+        if isinstance(node, ast.Attribute) and "stats_lock" in node.attr:
+            return node.attr
+    return None
+
+
+def _check_stats_guard(sf: SourceFile, cls: ast.ClassDef
+                       ) -> list[Finding]:
+    guard = _guard_lock_name(cls)
+    if guard is None:
+        return []
+
+    def resolve(path: str | None, aliases: dict[str, str]) -> str | None:
+        if path is None:
+            return None
+        head, _, rest = path.partition(".")
+        head = aliases.get(head, head)
+        return f"{head}.{rest}" if rest else head
+
+    def method_aliases(fn: ast.FunctionDef) -> dict[str, str]:
+        """Local name -> dotted self-path (``st = self.stats``)."""
+        out: dict[str, str] = {}
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                d = _dotted(node.value)
+                if d and d.startswith("self."):
+                    out[node.targets[0].id] = d
+        return out
+
+    def mutations(region: ast.AST):
+        """(object-path, node) pairs mutated in ``region``: attribute /
+        subscript writes and mutating method calls."""
+        for node in ast.walk(region):
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for tgt in targets:
+                    if isinstance(tgt, (ast.Attribute, ast.Subscript)):
+                        yield _dotted(tgt.value), node
+            elif (isinstance(node, ast.Call)
+                  and isinstance(node.func, ast.Attribute)
+                  and node.func.attr in _MUTATORS):
+                yield _dotted(node.func.value), node
+
+    # pass 1: derive the protected roots from guarded regions
+    protected: set[str] = set()
+    guarded_nodes: set[int] = set()
+    methods = [n for n in cls.body if isinstance(n, ast.FunctionDef)]
+    for fn in methods:
+        aliases = method_aliases(fn)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.With) and any(
+                    (_lock_key(i.context_expr) or "") == guard
+                    for i in node.items):
+                for sub in ast.walk(node):
+                    guarded_nodes.add(id(sub))
+                for path, mnode in mutations(node):
+                    r = resolve(path, aliases)
+                    if r and r.startswith("self."):
+                        protected.add(".".join(r.split(".")[:2]))
+    if not protected:
+        return []
+
+    # pass 2: mutations of protected roots outside guarded regions
+    out: list[Finding] = []
+    for fn in methods:
+        if fn.name in _EXEMPT_METHODS:
+            continue
+        aliases = method_aliases(fn)
+        for path, node in mutations(fn):
+            if id(node) in guarded_nodes:
+                continue
+            r = resolve(path, aliases)
+            if r is None:
+                continue
+            root = ".".join(r.split(".")[:2])
+            if root in protected:
+                out.append(Finding(
+                    rule="LOCK003", severity=ERROR, path=sf.rel,
+                    line=node.lineno, col=node.col_offset,
+                    message=(f"write to stats-family '{root}' outside "
+                             f"'with self.{guard}' in method "
+                             f"'{fn.name}' races the poller threads")))
+    return out

@@ -1,0 +1,486 @@
+"""Scan-purity pass: traced JAX bodies must stay pure and un-shadowed.
+
+Bodies traced by ``lax.scan`` / ``jax.jit`` / ``jax.vmap`` execute once
+at trace time; Python-level effects inside them are silently frozen or
+simply wrong.  PR 5 shipped (and had to fix) the canonical instance: a
+local variable in a scan ``step`` clobbered a same-named carry element,
+so the carry returned the local's value and the accumulator was lost.
+Four rules over every traced body found in the scanned files:
+
+  - **SCAN001** — carry-tuple hazards in ``lax.scan`` bodies: a carry
+    element is overwritten before it is ever read (the RHS does not
+    mention it — the PR-5 bug class: the carried value is silently
+    dropped), or a carry name shadows a variable of the enclosing
+    function (one name, two meanings at trace time).
+  - **SCAN002** — calls into Python's ``random`` / ``time`` /
+    ``datetime`` or ``numpy.random`` inside a traced body: these run
+    once at trace and bake a constant into the compiled program.
+  - **SCAN003** — mutation of closed-over state (``x[i] = ...``,
+    ``x.append(...)`` on a free variable): a trace-time side effect
+    that will not re-run per step/batch element.
+  - **SCAN004** — ``float()`` / ``int()`` / ``bool()`` or Python
+    ``if``/``while`` applied to tracer-derived names (function params,
+    carry elements, and anything assigned from them): concretization
+    errors waiting to happen once the body is actually traced.
+
+Traced bodies are discovered structurally: first argument of
+``lax.scan`` calls, functions wrapped in ``jax.jit``/``jax.vmap``/
+``jax.grad`` (including ``functools.partial(jax.jit, ...)``
+decorators).  Import aliases are resolved, so ``from jax import jit``
+and ``import jax.numpy as jnp`` both work.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .core import ERROR, AnalysisPass, Finding, SourceFile, register
+
+__all__ = ["ScanPurityPass"]
+
+_IMPURE_PREFIXES = ("random.", "time.", "datetime.",
+                    "numpy.random.", "np.random.")
+_IMPURE_EXACT = {"random", "time", "datetime"}
+_MUTATORS = {"append", "extend", "insert", "add", "update", "pop",
+             "popitem", "remove", "discard", "clear", "setdefault",
+             "sort", "reverse"}
+_CASTS = {"float", "int", "bool"}
+
+
+def _resolve_imports(tree: ast.Module) -> dict[str, str]:
+    """Local name -> dotted module path, from import statements."""
+    out: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` chain as a string, or None for non-trivial bases."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _TracedBody:
+    """One body to check: the function/lambda node, whether it is a
+    ``lax.scan`` step (carry semantics apply), its enclosing function
+    chain (for shadow detection), and any ``static_argnames``/
+    ``static_argnums`` params (static at trace time, not tracers)."""
+
+    def __init__(self, fn, is_scan_step: bool, ancestors: list,
+                 static_names: frozenset[str] = frozenset()):
+        self.fn = fn
+        self.is_scan_step = is_scan_step
+        self.ancestors = ancestors
+        self.static_names = static_names
+
+
+def _parent_map(tree: ast.Module) -> dict[ast.AST, ast.AST]:
+    parents: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def _enclosing_functions(node: ast.AST,
+                         parents: dict[ast.AST, ast.AST]) -> list:
+    out = []
+    cur = parents.get(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Lambda)):
+            out.append(cur)
+        cur = parents.get(cur)
+    return out
+
+
+def _find_traced_bodies(sf: SourceFile,
+                        imports: dict[str, str]) -> list[_TracedBody]:
+    parents = _parent_map(sf.tree)
+    defs_by_name: dict[str, list[ast.FunctionDef]] = {}
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.FunctionDef):
+            defs_by_name.setdefault(node.name, []).append(node)
+
+    def qualified(call_func: ast.AST) -> str:
+        d = _dotted(call_func) or ""
+        head, _, rest = d.partition(".")
+        base = imports.get(head, head)
+        return f"{base}.{rest}" if rest else base
+
+    def is_scan(call: ast.Call) -> bool:
+        q = qualified(call.func)
+        return q.endswith("lax.scan") or q == "jax.lax.scan"
+
+    def is_tracer_wrap(func: ast.AST) -> bool:
+        q = qualified(func)
+        return q in ("jax.jit", "jax.vmap", "jax.grad",
+                     "jax.value_and_grad", "jax.pmap", "jax.checkpoint",
+                     "jax.remat")
+
+    bodies: list[_TracedBody] = []
+    seen: set[int] = set()
+
+    def add(fn, is_scan_step: bool,
+            static: tuple[list[str], list[int]] = ([], [])) -> None:
+        if fn is None or id(fn) in seen:
+            return
+        seen.add(id(fn))
+        names, nums = static
+        static_names = set(names)
+        if nums and not isinstance(fn, ast.Lambda):
+            params = _param_names(fn)
+            static_names |= {params[i] for i in nums
+                             if 0 <= i < len(params)}
+        bodies.append(_TracedBody(fn, is_scan_step,
+                                  _enclosing_functions(fn, parents),
+                                  frozenset(static_names)))
+
+    def static_args(call: ast.Call) -> tuple[list[str], list[int]]:
+        """static_argnames/static_argnums of a jit-style call."""
+        names: list[str] = []
+        nums: list[int] = []
+        for kw in call.keywords:
+            vals = (kw.value.elts
+                    if isinstance(kw.value, (ast.Tuple, ast.List))
+                    else [kw.value])
+            consts = [v.value for v in vals
+                      if isinstance(v, ast.Constant)]
+            if kw.arg == "static_argnames":
+                names.extend(c for c in consts if isinstance(c, str))
+            elif kw.arg == "static_argnums":
+                nums.extend(c for c in consts if isinstance(c, int))
+        return names, nums
+
+    def resolve_fn_arg(node: ast.AST):
+        """A function argument: lambda, local def by name, or a nested
+        tracer wrap (``jax.jit(jax.vmap(f))``)."""
+        if isinstance(node, ast.Lambda):
+            return node
+        if isinstance(node, ast.Name):
+            cands = defs_by_name.get(node.id, [])
+            return cands[-1] if cands else None
+        if isinstance(node, ast.Call) and is_tracer_wrap(node.func):
+            return resolve_fn_arg(node.args[0]) if node.args else None
+        return None
+
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Call):
+            if is_scan(node) and node.args:
+                add(resolve_fn_arg(node.args[0]), True)
+            elif is_tracer_wrap(node.func) and node.args:
+                add(resolve_fn_arg(node.args[0]), False,
+                    static_args(node))
+        elif isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                if is_tracer_wrap(dec):
+                    add(node, False)
+                elif (isinstance(dec, ast.Call)
+                      and qualified(dec.func).endswith("partial")
+                      and dec.args and is_tracer_wrap(dec.args[0])):
+                    add(node, False, static_args(dec))
+                elif isinstance(dec, ast.Call) and is_tracer_wrap(dec.func):
+                    add(node, False, static_args(dec))
+    return bodies
+
+
+def _body_stmts(fn) -> list[ast.stmt]:
+    if isinstance(fn, ast.Lambda):
+        return []               # expression bodies: nothing to unpack
+    return fn.body
+
+
+def _param_names(fn) -> list[str]:
+    a = fn.args
+    return [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+
+
+def _assigned_names(fn) -> set[str]:
+    """Names bound anywhere in ``fn``, nested functions included —
+    used to decide free-vs-local for the mutation rule (conservative:
+    a name bound anywhere inside is treated as local)."""
+    out: set[str] = set(_param_names(fn)) if not isinstance(
+        fn, ast.Lambda) else set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(
+                node.ctx, (ast.Store,)):
+            out.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.add(node.name)
+    return out
+
+
+def _scope_bindings(fn) -> dict[str, int]:
+    """Names bound in ``fn``'s own scope only (nested function bodies
+    excluded) -> first binding line.  Params bind at the def line."""
+    out: dict[str, int] = {}
+    if isinstance(fn, ast.Lambda):
+        return out
+    for p in _param_names(fn):
+        out[p] = fn.lineno
+
+    def walk(node: ast.AST) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef,
+                                  ast.AsyncFunctionDef)):
+                out.setdefault(child.name, child.lineno)
+                continue                    # don't enter nested scopes
+            if isinstance(child, ast.Lambda):
+                continue
+            if isinstance(child, ast.Name) and isinstance(
+                    child.ctx, ast.Store):
+                out.setdefault(child.id, child.lineno)
+            walk(child)
+
+    for st in fn.body:
+        walk(st)
+        if isinstance(st, ast.Name) and isinstance(st.ctx, ast.Store):
+            out.setdefault(st.id, st.lineno)
+    return out
+
+
+def _flatten_target(node: ast.AST) -> list[str]:
+    if isinstance(node, ast.Name):
+        return [node.id]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            out.extend(_flatten_target(e))
+        return out
+    return []
+
+
+def _loads_in(node: ast.AST) -> set[str]:
+    return {n.id for n in ast.walk(node)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)}
+
+
+# attribute reads that are static under tracing: branching on a
+# tracer's shape/dtype is fine, branching on its *value* is not
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "weak_type"}
+
+
+def _value_loads_in(node: ast.AST) -> set[str]:
+    """Like ``_loads_in`` but skips subtrees under static attribute
+    access (``x.shape``, ``x.ndim`` ...): those reads never
+    concretize a tracer's value."""
+    out: set[str] = set()
+
+    def walk(n: ast.AST) -> None:
+        if isinstance(n, ast.Attribute) and n.attr in _STATIC_ATTRS:
+            return
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load):
+            out.add(n.id)
+        for child in ast.iter_child_nodes(n):
+            walk(child)
+
+    walk(node)
+    return out
+
+
+@register
+class ScanPurityPass(AnalysisPass):
+    name = "scan-purity"
+    rules = {
+        "SCAN001": ("lax.scan carry hazard: carry element overwritten "
+                    "before any read (PR-5 bug class) or carry name "
+                    "shadows an enclosing-scope variable"),
+        "SCAN002": ("Python random/time/datetime (or numpy.random) "
+                    "call inside a traced body: runs once at trace "
+                    "time, not per step"),
+        "SCAN003": ("mutation of closed-over state inside a traced "
+                    "body: a trace-time side effect"),
+        "SCAN004": ("float()/int()/bool() or Python if/while on a "
+                    "tracer-derived name inside a traced body"),
+    }
+
+    def run(self, files: list[SourceFile]) -> list[Finding]:
+        out: list[Finding] = []
+        for sf in files:
+            imports = _resolve_imports(sf.tree)
+            for body in _find_traced_bodies(sf, imports):
+                out.extend(_check_body(sf, body, imports))
+        # nested traced bodies are walked twice (own pass + enclosing
+        # body's walk): dedupe identical findings
+        uniq, seen = [], set()
+        for f in out:
+            key = (f.rule, f.path, f.line, f.col, f.message)
+            if key not in seen:
+                seen.add(key)
+                uniq.append(f)
+        return uniq
+
+
+def _check_body(sf: SourceFile, body: _TracedBody,
+                imports: dict[str, str]) -> list[Finding]:
+    fn = body.fn
+    findings: list[Finding] = []
+    params = _param_names(fn) if not isinstance(fn, ast.Lambda) else [
+        p.arg for p in fn.args.args]
+
+    # -- carry analysis (scan steps only) ---------------------------------------
+    carry_elems: list[str] = []
+    unpack_stmt: ast.stmt | None = None
+    if body.is_scan_step and params:
+        carry_param = params[0]
+        for st in _body_stmts(fn):
+            if (isinstance(st, ast.Assign) and len(st.targets) == 1
+                    and isinstance(st.value, ast.Name)
+                    and st.value.id == carry_param
+                    and isinstance(st.targets[0], (ast.Tuple, ast.List))):
+                carry_elems = _flatten_target(st.targets[0])
+                unpack_stmt = st
+                break
+
+    if carry_elems:
+        # shadowing of enclosing-scope names bound BEFORE the body's
+        # def: a later `(a, b), _ = lax.scan(step, ...)` result unpack
+        # is the idiom, not a hazard
+        outer: set[str] = set()
+        for anc in body.ancestors:
+            outer |= {nm for nm, line in _scope_bindings(anc).items()
+                      if line < fn.lineno}
+        for nm in carry_elems:
+            if nm in outer:
+                findings.append(Finding(
+                    rule="SCAN001", severity=ERROR, path=sf.rel,
+                    line=unpack_stmt.lineno, col=unpack_stmt.col_offset,
+                    message=(f"carry element '{nm}' shadows a variable "
+                             "of the enclosing function: one name, two "
+                             "meanings at trace time")))
+        findings.extend(_check_dead_overwrite(
+            sf, fn, carry_elems, unpack_stmt))
+
+    # -- walk the body for impurity / mutation / concretization ------------------
+    local = _assigned_names(fn)
+    tainted = (set(params) | set(carry_elems)) - body.static_names
+    # forward taint propagation to a fixpoint (bounded)
+    for _ in range(3):
+        grew = False
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                if _loads_in(node.value) & tainted:
+                    for tgt in node.targets:
+                        for nm in _flatten_target(tgt):
+                            if nm not in tainted:
+                                tainted.add(nm)
+                                grew = True
+        if not grew:
+            break
+
+    def qualified(call_func: ast.AST) -> str:
+        d = _dotted(call_func) or ""
+        head, _, rest = d.partition(".")
+        base = imports.get(head, head)
+        return f"{base}.{rest}" if rest else base
+
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            q = qualified(node.func)
+            if (q in _IMPURE_EXACT
+                    or any(q.startswith(p) for p in _IMPURE_PREFIXES)):
+                findings.append(Finding(
+                    rule="SCAN002", severity=ERROR, path=sf.rel,
+                    line=node.lineno, col=node.col_offset,
+                    message=(f"call to '{q}' inside a traced body runs "
+                             "at trace time, not per step")))
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr in _MUTATORS):
+                root = _dotted(node.func.value)
+                root_head = root.split(".")[0] if root else None
+                if root_head and root_head not in local:
+                    findings.append(Finding(
+                        rule="SCAN003", severity=ERROR, path=sf.rel,
+                        line=node.lineno, col=node.col_offset,
+                        message=(f"'{root}.{node.func.attr}(...)' "
+                                 "mutates closed-over state inside a "
+                                 "traced body")))
+            elif (isinstance(node.func, ast.Name)
+                  and node.func.id in _CASTS
+                  and any(_value_loads_in(a) & tainted
+                          for a in node.args)):
+                findings.append(Finding(
+                    rule="SCAN004", severity=ERROR, path=sf.rel,
+                    line=node.lineno, col=node.col_offset,
+                    message=(f"{node.func.id}() on a tracer-derived "
+                             "value inside a traced body forces "
+                             "concretization")))
+        elif isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for tgt in targets:
+                if isinstance(tgt, (ast.Subscript, ast.Attribute)):
+                    root = _dotted(tgt.value if isinstance(
+                        tgt, ast.Subscript) else tgt.value)
+                    root_head = root.split(".")[0] if root else None
+                    if root_head and root_head not in local:
+                        findings.append(Finding(
+                            rule="SCAN003", severity=ERROR, path=sf.rel,
+                            line=node.lineno, col=node.col_offset,
+                            message=(f"write to closed-over '{root}' "
+                                     "inside a traced body is a "
+                                     "trace-time side effect")))
+        elif isinstance(node, (ast.If, ast.While)):
+            hot = _value_loads_in(node.test) & tainted
+            if hot:
+                nm = sorted(hot)[0]
+                findings.append(Finding(
+                    rule="SCAN004", severity=ERROR, path=sf.rel,
+                    line=node.lineno, col=node.col_offset,
+                    message=(f"Python {'if' if isinstance(node, ast.If) else 'while'} "
+                             f"on tracer-derived '{nm}' inside a traced "
+                             "body; use lax.cond/jnp.where")))
+    return findings
+
+
+def _check_dead_overwrite(sf: SourceFile, fn, carry_elems: list[str],
+                          unpack_stmt: ast.stmt) -> list[Finding]:
+    """First event per carry element must not be a store whose RHS
+    ignores it: that drops the carried value on the floor (the PR-5
+    ``win`` bug)."""
+    events: dict[str, list[tuple[int, int, str]]] = {
+        nm: [] for nm in carry_elems}
+    for node in ast.walk(fn):
+        if node is unpack_stmt:
+            continue
+        if isinstance(node, ast.Assign):
+            reads = _loads_in(node.value)
+            for tgt in node.targets:
+                for nm in _flatten_target(tgt):
+                    if nm in events:
+                        kind = "read" if nm in reads else "store"
+                        events[nm].append(
+                            (node.lineno, node.col_offset, kind))
+        elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            if node.id in events:
+                events[node.id].append(
+                    (node.lineno, node.col_offset, "read"))
+    # drop the unpack statement's own loads (the carry param read)
+    out: list[Finding] = []
+    for nm, evs in events.items():
+        evs = [e for e in evs if e[0] != unpack_stmt.lineno]
+        if not evs:
+            continue
+        evs.sort()
+        line, col, kind = evs[0]
+        if kind == "store":
+            out.append(Finding(
+                rule="SCAN001", severity=ERROR, path=sf.rel,
+                line=line, col=col,
+                message=(f"carry element '{nm}' is overwritten before "
+                         "it is ever read: the carried value is "
+                         "silently dropped (PR-5 bug class)")))
+    return out

@@ -1,0 +1,277 @@
+"""Units pass: microsecond/nanosecond naming discipline.
+
+The whole codebase encodes time units in name suffixes (``_us``,
+``_ns``, ``_ms``, ``_s``) and converts between them with explicit
+power-of-1000 factors (``/ 1e3``, ``* 1_000`` ...).  Mixing suffixes
+without such a factor is the classic silent 1000x bug:
+
+  - **UNITS001** — arithmetic (``+``/``-``), comparison, assignment, or
+    keyword-argument flow combines two expressions with *different*
+    definite unit suffixes and no conversion factor anywhere in either
+    operand.  Any ``* / 1e3``-family constant in a subtree marks it
+    "converted" (unit intentionally changed) and suppresses the rule —
+    the pass enforces that conversions are *written down*, not that
+    they are correct to a power.
+  - **UNITS002** — an unsuffixed literal-valued name (``t = 500``)
+    flows into slots of two *different* units in one function (e.g.
+    assigned to ``sleep_ns`` here and added to ``gap_us`` there).  A
+    raw literal carries no unit; using one value in both a ``_us`` and
+    a ``_ns`` position means at least one of them is off by 1000.
+
+Unit inference is syntactic and deliberately conservative: only a
+definite-vs-definite clash fires, unknown absorbs everything, and
+dividing two same-unit expressions yields a unitless ratio.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from .core import ERROR, AnalysisPass, Finding, SourceFile, register
+
+__all__ = ["UnitsPass"]
+
+_SUFFIX_RE = re.compile(r"_(us|ns|ms|s)$")
+
+# any power-of-1000 factor counts as an explicit conversion
+_CONVERSION_FACTORS = {
+    1e3, 1e6, 1e9, 1e-3, 1e-6, 1e-9,
+    1000, 1000_000, 1000_000_000,
+}
+
+UNKNOWN = "?"          # explicitly converted / indeterminate: absorbs
+
+
+def name_unit(name: str) -> str | None:
+    m = _SUFFIX_RE.search(name)
+    return m.group(1) if m else None
+
+
+def _is_conversion_const(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Constant)
+            and isinstance(node.value, (int, float))
+            and float(node.value) in _CONVERSION_FACTORS)
+
+
+class _UnitInferrer:
+    """Infer the unit of an expression: a suffix string, ``None``
+    (unitless / no opinion), or ``UNKNOWN`` (converted; absorbs)."""
+
+    def infer(self, node: ast.AST) -> str | None:
+        if isinstance(node, ast.Name):
+            return name_unit(node.id)
+        if isinstance(node, ast.Attribute):
+            return name_unit(node.attr)
+        if isinstance(node, ast.Call):
+            return self._infer_call(node)
+        if isinstance(node, ast.Subscript):
+            return self.infer(node.value)
+        if isinstance(node, ast.UnaryOp):
+            return self.infer(node.operand)
+        if isinstance(node, ast.IfExp):
+            return self._combine(self.infer(node.body),
+                                 self.infer(node.orelse))
+        if isinstance(node, ast.BinOp):
+            return self._infer_binop(node)
+        return None
+
+    def _infer_call(self, node: ast.Call) -> str | None:
+        fname = ""
+        if isinstance(node.func, ast.Name):
+            fname = node.func.id
+        elif isinstance(node.func, ast.Attribute):
+            fname = node.func.attr
+        # int()/float()/abs()/max()/min() are unit-transparent
+        if fname in ("int", "float", "abs", "max", "min", "round"):
+            units = [self.infer(a) for a in node.args]
+            out: str | None = None
+            for u in units:
+                out = self._combine(out, u)
+            return out
+        # time.monotonic_ns() and friends carry their unit in the name
+        return name_unit(fname)
+
+    def _infer_binop(self, node: ast.BinOp) -> str | None:
+        if isinstance(node.op, (ast.Mult, ast.Div)):
+            # an explicit power-of-1000 factor converts: unit unknown
+            if (_is_conversion_const(node.left)
+                    or _is_conversion_const(node.right)):
+                return UNKNOWN
+            lu, ru = self.infer(node.left), self.infer(node.right)
+            if UNKNOWN in (lu, ru):
+                return UNKNOWN
+            if isinstance(node.op, ast.Div):
+                if lu and ru and lu == ru:
+                    return None          # same-unit ratio: unitless
+                return lu if ru is None else UNKNOWN
+            # Mult: unit * unitless keeps the unit; unit * unit is a
+            # rate-style product whose unit we don't model
+            if lu and ru:
+                return UNKNOWN
+            return lu or ru
+        if isinstance(node.op, (ast.Add, ast.Sub)):
+            return self._combine(self.infer(node.left),
+                                 self.infer(node.right))
+        if isinstance(node.op, ast.Mod):
+            return self.infer(node.left)
+        return None
+
+    @staticmethod
+    def _combine(a: str | None, b: str | None) -> str | None:
+        if UNKNOWN in (a, b):
+            return UNKNOWN
+        if a and b and a != b:
+            return UNKNOWN               # the clash is flagged elsewhere
+        return a or b
+
+
+@register
+class UnitsPass(AnalysisPass):
+    name = "units"
+    rules = {
+        "UNITS001": ("arithmetic/comparison/assignment mixes *_us and "
+                     "*_ns (or other time-suffixed) names without an "
+                     "explicit power-of-1000 conversion"),
+        "UNITS002": ("an unsuffixed literal-valued name flows into "
+                     "slots of two different time units in the same "
+                     "function"),
+    }
+
+    def run(self, files: list[SourceFile]) -> list[Finding]:
+        out: list[Finding] = []
+        for sf in files:
+            out.extend(_check_file(sf))
+        return out
+
+
+def _check_file(sf: SourceFile) -> list[Finding]:
+    inf = _UnitInferrer()
+    findings: list[Finding] = []
+
+    def clash(a: str | None, b: str | None) -> bool:
+        return bool(a and b and a != UNKNOWN and b != UNKNOWN and a != b)
+
+    def flag(node: ast.AST, a: str, b: str, what: str) -> None:
+        findings.append(Finding(
+            rule="UNITS001", severity=ERROR, path=sf.rel,
+            line=node.lineno, col=node.col_offset,
+            message=f"{what} mixes {a} and {b} operands without an "
+                    f"explicit conversion"))
+
+    class V(ast.NodeVisitor):
+        def visit_BinOp(self, node: ast.BinOp) -> None:
+            if isinstance(node.op, (ast.Add, ast.Sub)):
+                lu, ru = inf.infer(node.left), inf.infer(node.right)
+                if clash(lu, ru):
+                    flag(node, lu, ru, "arithmetic")
+            self.generic_visit(node)
+
+        def visit_Compare(self, node: ast.Compare) -> None:
+            exprs = [node.left, *node.comparators]
+            units = [inf.infer(e) for e in exprs]
+            for a, b in zip(units, units[1:]):
+                if clash(a, b):
+                    flag(node, a, b, "comparison")
+                    break
+            self.generic_visit(node)
+
+        def visit_Assign(self, node: ast.Assign) -> None:
+            vu = inf.infer(node.value)
+            for tgt in node.targets:
+                tu = inf.infer(tgt)
+                if clash(tu, vu):
+                    flag(node, tu, vu, "assignment")
+            self.generic_visit(node)
+
+        def visit_AugAssign(self, node: ast.AugAssign) -> None:
+            if isinstance(node.op, (ast.Add, ast.Sub)):
+                tu, vu = inf.infer(node.target), inf.infer(node.value)
+                if clash(tu, vu):
+                    flag(node, tu, vu, "augmented assignment")
+            self.generic_visit(node)
+
+        def visit_Call(self, node: ast.Call) -> None:
+            for kw in node.keywords:
+                if kw.arg is None:
+                    continue
+                ku = name_unit(kw.arg)
+                vu = inf.infer(kw.value)
+                if clash(ku, vu):
+                    flag(kw.value, ku, vu, f"keyword '{kw.arg}'")
+            self.generic_visit(node)
+
+    V().visit(sf.tree)
+    findings.extend(_check_literal_flow(sf, inf))
+    return findings
+
+
+def _check_literal_flow(sf: SourceFile, inf: _UnitInferrer
+                        ) -> list[Finding]:
+    """UNITS002: per function, names assigned only bare numeric literals
+    (and carrying no suffix themselves) that are then used in positions
+    implying two different units."""
+    findings: list[Finding] = []
+    for fn in ast.walk(sf.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        literal_names: set[str] = set()
+        poisoned: set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name) and not name_unit(tgt.id):
+                        if (isinstance(node.value, ast.Constant)
+                                and isinstance(node.value.value,
+                                               (int, float))):
+                            literal_names.add(tgt.id)
+                        else:
+                            poisoned.add(tgt.id)
+            elif isinstance(node, (ast.AugAssign, ast.For)):
+                tgt = node.target
+                if isinstance(tgt, ast.Name):
+                    poisoned.add(tgt.id)
+        literal_names -= poisoned
+        if not literal_names:
+            continue
+        # collect each literal name's unit contexts
+        contexts: dict[str, dict[str, ast.AST]] = {}
+
+        def saw(nm: str, unit: str | None, node: ast.AST) -> None:
+            if unit and unit != UNKNOWN and nm in literal_names:
+                contexts.setdefault(nm, {}).setdefault(unit, node)
+
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                if (isinstance(node.value, ast.Name)
+                        and node.value.id in literal_names):
+                    for tgt in node.targets:
+                        saw(node.value.id, inf.infer(tgt), node)
+            elif isinstance(node, ast.BinOp):
+                if isinstance(node.op, (ast.Add, ast.Sub)):
+                    for a, b in ((node.left, node.right),
+                                 (node.right, node.left)):
+                        if isinstance(a, ast.Name):
+                            saw(a.id, inf.infer(b), node)
+            elif isinstance(node, ast.Compare):
+                exprs = [node.left, *node.comparators]
+                for i, e in enumerate(exprs):
+                    if isinstance(e, ast.Name):
+                        for j, other in enumerate(exprs):
+                            if j != i:
+                                saw(e.id, inf.infer(other), node)
+            elif isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if (kw.arg is not None
+                            and isinstance(kw.value, ast.Name)):
+                        saw(kw.value.id, name_unit(kw.arg), kw.value)
+        for nm, units in sorted(contexts.items()):
+            if len(units) >= 2:
+                node = min(units.values(), key=lambda n: n.lineno)
+                findings.append(Finding(
+                    rule="UNITS002", severity=ERROR, path=sf.rel,
+                    line=node.lineno, col=node.col_offset,
+                    message=(f"literal-valued name '{nm}' is used in "
+                             f"{' and '.join(sorted(units))} positions; "
+                             "a bare literal cannot be both")))
+    return findings

@@ -556,6 +556,16 @@ def _compiled_sweep(n_slots: int, slot_us: float, m_max: int, q_max: int,
 
 
 _EVENT_ENGINE_ONLY_FIELDS = ("timeseries_bin_us",)
+# SimRunConfig fields this engine deliberately does NOT read, named so
+# the engine-parity static check (repro.analysis, PARITY001/002) can
+# prove the drift guard complete instead of trusting it:
+#   - grid-supplied: seed and n_queues come per-point from the
+#     SweepGrid row (the grid axis IS the sweep surface; cfg.seed /
+#     cfg.n_queues are event-engine inputs only);
+#   - sample-path detail: the fixed-slot engine keeps no latency
+#     reservoir, so its size knob has no fixed-slot meaning.
+_GRID_SUPPLIED_FIELDS = ("seed", "n_queues")
+_NO_SAMPLE_PATH_FIELDS = ("latency_reservoir",)
 
 
 def unsupported_config_fields(cfg: SimRunConfig) -> list[str]:

@@ -163,7 +163,7 @@ class Runtime:
                        busy_tries=q.lock.busy_tries - b[2],
                        serviced=q.serviced - b[3],
                        cycles=cycles_q[i])
-            for i, (q, b) in enumerate(zip(self.queues, base))
+            for i, (q, b) in enumerate(zip(self.queues, base, strict=True))
         ]
         st.offered = sum(pq.offered for pq in st.per_queue)
         st.dropped = sum(pq.dropped for pq in st.per_queue)
@@ -185,6 +185,13 @@ class Runtime:
             t_cpu0 = time.thread_time_ns()
             lock_taken = False
             items = 0
+            # stats are buffered during the sweep and flushed under ONE
+            # _stats_lock acquisition per wake, after every queue lock
+            # is back: a queue owner never blocks on another lock
+            # (TryLock discipline — analysis rule LOCK002), and stats
+            # contention drops from per-cycle to per-wake
+            lat_pending: list[float] = []
+            cycles_pending: list[int] = []
             # sweep own queues first; with steal, keep visiting the longest
             # unvisited backlog until none remains — mirroring the
             # simulator's sweep so both backends run the same semantics
@@ -208,10 +215,9 @@ class Runtime:
                                 items += len(burst)
                                 if wake % self._lat_every == 0:
                                     now = time.monotonic_ns()
-                                    sample = [(now - ts) / 1e3
-                                              for ts, _ in burst[:4]]
-                                    with self._stats_lock:
-                                        st.latency_us.extend(sample)
+                                    lat_pending.extend(
+                                        (now - ts) / 1e3
+                                        for ts, _ in burst[:4])
                                 self.process([it for _, it in burst])
                             did = self.idle_work() if self.idle_work else False
                             if not burst and not did:
@@ -220,8 +226,7 @@ class Runtime:
                         q.last_busy_end_ns = busy_end
                         policy.on_cycle_end((busy_end - busy_start) / 1e3,
                                             max(vacation_ns / 1e3, 1e-3))
-                        with self._stats_lock:
-                            self._cycles_q[qi] += 1
+                        cycles_pending.append(qi)
                     finally:
                         q.lock.release()
                 if si == len(targets) and slot.steal:
@@ -241,6 +246,10 @@ class Runtime:
                 st.items += items
                 if lock_taken:
                     st.cycles += 1
+                if lat_pending:
+                    st.latency_us.extend(lat_pending)
+                for qi in cycles_pending:
+                    self._cycles_q[qi] += 1
             wake += 1
             sleep_ns = policy.on_wake(WakeContext(
                 primary=lock_taken or not slot.demote_on_miss, items=items,

@@ -167,7 +167,8 @@ class LoadSchedule:
         every interior segment edge with a scale change."""
         edges, scales = self.segments(duration_us)
         out = [float(e) for e, a, b in
-               zip(edges[1:], scales[1:], scales[:-1]) if a != b]
+               zip(edges[1:], scales[1:], scales[:-1], strict=True)
+               if a != b]
         return tuple(out)
 
     def descriptor(self) -> str:
@@ -192,7 +193,7 @@ class StepSchedule(LoadSchedule):
         if len(t) != len(s) or not t or t[0] != 0.0:
             raise ValueError("StepSchedule needs times[0]=0 and "
                              "len(times) == len(scales)")
-        if any(b <= a for a, b in zip(t, t[1:])):
+        if any(b <= a for a, b in zip(t, t[1:], strict=False)):
             raise ValueError("StepSchedule times must strictly increase")
         if any(x < 0 for x in s):
             raise ValueError("StepSchedule scales must be >= 0")
@@ -206,7 +207,7 @@ class StepSchedule(LoadSchedule):
         # '|'-separated: benchmark rows embed descriptors in 'k=v;k=v'
         # derived strings, so ';' (and ',', the CSV delimiter) are out
         parts = "|".join(f"{t:g}:{s:g}" for t, s in
-                         zip(self.times_us, self.scales))
+                         zip(self.times_us, self.scales, strict=True))
         return f"step[{parts}]"
 
 

@@ -76,7 +76,7 @@ class Reservoir:
         self.count += arr.size
         js = (self._np_rng.random(arr.size) * ks).astype(np.int64)
         hit = js < self.capacity
-        for j, v in zip(js[hit].tolist(), arr[hit].tolist()):
+        for j, v in zip(js[hit].tolist(), arr[hit].tolist(), strict=True):
             self._buf[j] = v            # in order: later values win ties
 
     def merge(self, other: "Reservoir") -> "Reservoir":

@@ -1,0 +1,18 @@
+"""LOCK002 fixture: a blocking ``with`` acquisition inside the region
+where a queue TryLock is held — the owner can stall every producer."""
+import threading
+
+
+class Poller:
+    def __init__(self, queue):
+        self.queue = queue
+        self._io_lock = threading.Lock()
+
+    def drain(self):
+        q = self.queue
+        if q.lock.try_acquire():
+            try:
+                with self._io_lock:
+                    pass
+            finally:
+                q.lock.release()

@@ -1,0 +1,32 @@
+"""Clean twin for the lock-discipline rules: consistent acquisition
+order, nothing blocking inside the TryLock region (stats are buffered
+and flushed after release), every stats write guarded."""
+import threading
+
+
+class Worker:
+    def __init__(self):
+        self.stats = {"items": 0}
+        self._stats_lock = threading.Lock()
+        self._intake_lock = threading.Lock()
+        self._drain_lock = threading.Lock()
+
+    def forward(self):
+        with self._intake_lock:
+            with self._drain_lock:
+                pass
+
+    def backward(self):
+        with self._intake_lock:
+            with self._drain_lock:
+                pass
+
+    def tally(self, queue):
+        pending = []
+        if queue.lock.try_acquire():
+            try:
+                pending.append(1)
+            finally:
+                queue.lock.release()
+        with self._stats_lock:
+            self.stats["items"] += len(pending)

@@ -1,0 +1,19 @@
+"""LOCK001 fixture: two methods acquire the same pair of locks in
+opposite orders — a deadlock when the acquisitions interleave."""
+import threading
+
+
+class Pipeline:
+    def __init__(self):
+        self._intake_lock = threading.Lock()
+        self._drain_lock = threading.Lock()
+
+    def forward(self):
+        with self._intake_lock:
+            with self._drain_lock:
+                pass
+
+    def backward(self):
+        with self._drain_lock:
+            with self._intake_lock:
+                pass

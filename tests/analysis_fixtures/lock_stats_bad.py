@@ -1,0 +1,19 @@
+"""LOCK003 fixture: ``self.stats`` is established as stats-family by
+the guarded write in ``_loop``; the second write in the same method
+skips the guard and races the poller threads.  The write in ``stop``
+is exempt — lifecycle methods run while the threads are quiescent."""
+import threading
+
+
+class Worker:
+    def __init__(self):
+        self.stats = {"items": 0}
+        self._stats_lock = threading.Lock()
+
+    def _loop(self):
+        with self._stats_lock:
+            self.stats["items"] += 1
+        self.stats["items"] += 2
+
+    def stop(self):
+        self.stats["items"] = 0

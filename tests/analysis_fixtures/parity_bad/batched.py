@@ -1,0 +1,13 @@
+"""Engine-parity fixture (bad side): both stale-declaration shapes.
+
+``_EVENT_ONLY_FIELDS`` names a field that no longer exists on the
+config class; ``_GRID_FIELDS`` names one the engine actually reads.
+Each is a PARITY002.
+"""
+
+_EVENT_ONLY_FIELDS = ("timeseries_bin_us",)
+_GRID_FIELDS = ("duration_us",)
+
+
+def simulate_batch(cfg):
+    return cfg.duration_us * cfg.service_rate_mpps

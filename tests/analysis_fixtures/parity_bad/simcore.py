@@ -1,0 +1,10 @@
+"""Engine-parity fixture (bad side): ``window_us`` is a config field
+the sibling batched engine neither reads nor declares — PARITY001."""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class SimRunConfig:
+    duration_us: float = 1_000.0
+    service_rate_mpps: float = 29.76
+    window_us: float = 0.0

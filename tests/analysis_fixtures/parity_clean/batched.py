@@ -1,0 +1,8 @@
+"""Engine-parity fixture (clean side): reads two fields, declares the
+third as deliberately event-engine-only."""
+
+_EVENT_ENGINE_ONLY_FIELDS = ("timeseries_bin_us",)
+
+
+def simulate_batch(cfg):
+    return cfg.duration_us * cfg.service_rate_mpps

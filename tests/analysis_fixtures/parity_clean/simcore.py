@@ -1,0 +1,10 @@
+"""Engine-parity fixture (clean side): every field is either read by
+the sibling engine or declared in one of its *_FIELDS tuples."""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class SimRunConfig:
+    duration_us: float = 1_000.0
+    service_rate_mpps: float = 29.76
+    timeseries_bin_us: float = 50.0

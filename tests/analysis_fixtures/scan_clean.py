@@ -1,0 +1,15 @@
+"""Clean twin for the scan-purity rules: folded-in jax randomness, no
+closure mutation, branchless clamping, no casts."""
+import jax
+import jax.numpy as jnp
+
+
+def clamp_sum(xs, limit):
+    def step(carry, x):
+        key = jax.random.fold_in(jax.random.PRNGKey(0), 7)
+        jitter = jax.random.uniform(key, ())
+        x = jnp.minimum(x, limit)
+        return carry + x * jitter, None
+
+    total, _ = jax.lax.scan(step, 0.0, xs)
+    return total

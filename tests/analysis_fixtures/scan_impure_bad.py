@@ -1,0 +1,14 @@
+"""SCAN002 fixture: ``random.random()`` inside a scan step runs once
+at trace time and bakes a single constant into the compiled loop."""
+import random
+
+import jax
+
+
+def noisy_sum(xs):
+    def step(carry, x):
+        jitter = random.random()
+        return carry + x * jitter, None
+
+    total, _ = jax.lax.scan(step, 0.0, xs)
+    return total

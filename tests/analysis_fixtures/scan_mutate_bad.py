@@ -1,0 +1,14 @@
+"""SCAN003 fixture: appending to a closed-over list inside a scan step
+is a trace-time side effect — it runs once, not per step."""
+import jax
+
+
+def collect(xs):
+    seen = []
+
+    def step(carry, x):
+        seen.append(x)
+        return carry + x, None
+
+    total, _ = jax.lax.scan(step, 0.0, xs)
+    return total, seen

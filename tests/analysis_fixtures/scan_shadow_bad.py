@@ -1,0 +1,24 @@
+"""SCAN001 fixture: reconstruction of the PR-5 carry-shadowing bug.
+
+The windowed accumulator ``win`` is carried through the scan, but the
+step body (a) names its carry element after the enclosing function's
+``win`` local and (b) overwrites it before ever reading it — so the
+carried window state is silently dropped every step, exactly the bug
+PR 5 shipped and had to fix.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def run(n_slots, stall_mean_us):
+    win = jnp.zeros(4)
+
+    def step(carry, t):
+        (backlog, win) = carry
+        win = t + stall_mean_us
+        backlog = backlog + win
+        return (backlog, win), None
+
+    (backlog, win_out), _ = jax.lax.scan(
+        step, (jnp.zeros(4), win), jnp.arange(n_slots))
+    return backlog, win_out

@@ -1,0 +1,20 @@
+"""Clean twin of scan_shadow_bad: the carry element keeps a distinct
+name from every pre-def enclosing binding, and is read before it is
+updated — the carried value survives."""
+import jax
+import jax.numpy as jnp
+
+
+def run(n_slots, stall_mean_us):
+    acc0 = jnp.zeros(4)
+
+    def step(carry, t):
+        (backlog, win_acc) = carry
+        stall = t + stall_mean_us
+        win_acc = win_acc + stall
+        backlog = backlog + win_acc
+        return (backlog, win_acc), None
+
+    (backlog, win_acc), _ = jax.lax.scan(
+        step, (jnp.zeros(4), acc0), jnp.arange(n_slots))
+    return backlog, win_acc

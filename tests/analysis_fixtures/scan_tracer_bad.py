@@ -1,0 +1,13 @@
+"""SCAN004 fixture: Python ``if`` and ``float()`` on tracer values
+inside a scan step — both force concretization once actually traced."""
+import jax
+
+
+def clamp_sum(xs, limit):
+    def step(carry, x):
+        if x > limit:
+            x = limit
+        return carry + float(x), None
+
+    total, _ = jax.lax.scan(step, 0.0, xs)
+    return total

@@ -1,0 +1,9 @@
+"""UNITS002 fixture: one bare literal flows into a ns slot AND a us
+slot — at least one of the two uses is off by a factor of 1000."""
+
+
+def arm_timers(sleep_fn):
+    timeout = 500
+    sleep_ns = timeout
+    budget_us = timeout
+    return sleep_fn(sleep_ns), budget_us

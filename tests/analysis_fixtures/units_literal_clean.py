@@ -1,0 +1,8 @@
+"""Clean twin of units_literal_bad: each slot gets its own literal in
+its own unit."""
+
+
+def arm_timers(sleep_fn):
+    timeout_ns = 500_000
+    budget_us = 500
+    return sleep_fn(timeout_ns), budget_us

@@ -1,0 +1,5 @@
+"""UNITS001 fixture: us + ns arithmetic with no conversion factor."""
+
+
+def total_wait(duration_us, overshoot_ns):
+    return duration_us + overshoot_ns

@@ -1,0 +1,6 @@
+"""Clean twin of units_mix_bad: the conversion is written down."""
+
+
+def total_wait(duration_us, overshoot_ns):
+    overshoot_us = overshoot_ns / 1_000
+    return duration_us + overshoot_us
