@@ -55,6 +55,7 @@ def main() -> None:
 
     from benchmarks.adaptation import adaptation
     from benchmarks.cpu_sharing import cpu_sharing
+    from benchmarks.fleet import fleet_bench
     from benchmarks.kernels_bench import kernels
     from benchmarks.policy_matrix import matrix_policies_workloads
     from benchmarks.rss_skew import matrix_rss_skew
@@ -73,12 +74,26 @@ def main() -> None:
     )
     from benchmarks.roofline_table import roofline
 
+    def compile_caches(quick: bool = False):
+        """JIT compile-cache counters across everything that ran above —
+        hits/misses/evictions per registered ``CompileCache`` (the
+        batched and fleet sweep caches), so cache behavior lands in the
+        perf trajectory next to the numbers it explains.  Must stay the
+        LAST suite."""
+        from repro.runtime import compile_cache_stats
+
+        return [(f"cache/{s['name']}", float(s["hits"]),
+                 f"misses={s['misses']};evictions={s['evictions']};"
+                 f"currsize={s['currsize']};maxsize={s['maxsize']}")
+                for s in compile_cache_stats()]
+
     suites = [
         table1_sleep_precision, fig2_sleep_cpu, fig5_vacation_pdf,
         table2_vbar_tuning, fig7_tl_sweep, fig8_m_sweep,
         table3_nanosleep_loss, fig11_adaptation, fig12_dpdk_compare,
         matrix_policies_workloads, matrix_rss_skew, sweep_frontier,
-        cpu_sharing, adaptation, fig15_applications, kernels, roofline,
+        cpu_sharing, adaptation, fig15_applications, fleet_bench,
+        kernels, roofline, compile_caches,
     ]
     print("name,us_per_call,derived")
     failures = 0

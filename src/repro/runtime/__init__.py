@@ -73,6 +73,11 @@ _LAZY_SUBMODULE = {
     "CalibrationMismatch": "calibrate",
     "build_operating_table": "calibrate",
     "schedule_spot_check": "calibrate",
+    "CompileCache": "batched",
+    "compile_cache_stats": "batched",
+    "FleetGrid": "fleet",
+    "FleetStats": "fleet",
+    "simulate_fleet": "fleet",
 }
 
 
@@ -95,6 +100,8 @@ from .dispatch import (
     FlowHashDispatch,
     LeastLoadedDispatch,
     RoundRobinDispatch,
+    StaleLeastLoadedDispatch,
+    WeightedDispatch,
 )
 from .policy import (
     BusyPollPolicy,
@@ -120,9 +127,19 @@ from .sim import (
     PERFECT_SLEEP_MODEL,
     SimRunConfig,
     SleepModel,
+    fleet_tail_reference,
+    simulate_fleet_run,
     simulate_run,
 )
-from .stats import QueueStats, Reservoir, RunStats, TrackingStats, WindowedSeries
+from .simcore import FleetConfig
+from .stats import (
+    QueueStats,
+    Reservoir,
+    RunStats,
+    TrackingStats,
+    WindowedSeries,
+    hedged_latency_quantile,
+)
 from .workload import (
     CBRWorkload,
     OnOffBurstyWorkload,
@@ -155,6 +172,8 @@ __all__ = [
     "RoundRobinDispatch",
     "FlowHashDispatch",
     "LeastLoadedDispatch",
+    "WeightedDispatch",
+    "StaleLeastLoadedDispatch",
     "Assignment",
     "ThreadSlot",
     "SharedAssignment",
@@ -174,6 +193,15 @@ __all__ = [
     "PERFECT_SLEEP_MODEL",
     "SimRunConfig",
     "simulate_run",
+    "FleetConfig",
+    "simulate_fleet_run",
+    "fleet_tail_reference",
+    "hedged_latency_quantile",
+    "FleetGrid",
+    "FleetStats",
+    "simulate_fleet",
+    "CompileCache",
+    "compile_cache_stats",
     "SweepGrid",
     "BatchStats",
     "simulate_batch",

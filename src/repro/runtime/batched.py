@@ -95,9 +95,10 @@ configurations in the same test module.
 
 from __future__ import annotations
 
+import logging
 import math
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from functools import lru_cache
 from typing import NamedTuple
 
 import numpy as np
@@ -109,7 +110,85 @@ from .simcore import SimRunConfig
 from .stats import Reservoir, RunStats, WindowedSeries
 
 __all__ = ["SweepGrid", "BatchStats", "simulate_batch",
-           "unsupported_config_fields", "validate_batched_config"]
+           "unsupported_config_fields", "validate_batched_config",
+           "CompileCache", "compile_cache_stats"]
+
+_log = logging.getLogger(__name__)
+
+
+class _CacheInfo(NamedTuple):
+    hits: int
+    misses: int
+    maxsize: int
+    currsize: int
+    evictions: int
+
+
+class CompileCache:
+    """LRU cache for jitted kernel builders, keyed on static shapes.
+
+    ``functools.lru_cache`` is silent: when single-host and fleet shapes
+    alternate past the bound, every call re-traces and the only symptom
+    is a mysteriously slow process.  This cache (a) has a bound sized
+    for fleet + single-host sweeps coexisting, (b) exposes hit / miss /
+    eviction counters (``cache_info()``, surfaced by
+    ``benchmarks/run.py --json``), and (c) logs every eviction with the
+    evicted key, so a retrace storm is visible in logs instead of
+    silent.  Every instance self-registers for ``compile_cache_stats``.
+    """
+
+    _registry: list["CompileCache"] = []
+
+    def __init__(self, build, *, maxsize: int = 64, name: str = ""):
+        self._build = build
+        self.maxsize = int(maxsize)
+        self.name = name or getattr(build, "__name__", "kernel")
+        self._entries: OrderedDict[tuple, object] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        CompileCache._registry.append(self)
+
+    def __call__(self, *key):
+        try:
+            fn = self._entries[key]
+        except KeyError:
+            self.misses += 1
+            fn = self._build(*key)
+            self._entries[key] = fn
+            if len(self._entries) > self.maxsize:
+                evicted, _ = self._entries.popitem(last=False)
+                self.evictions += 1
+                _log.warning(
+                    "%s: evicting compiled kernel for static key %r "
+                    "(cache full at %d entries, %d evictions so far) — "
+                    "alternating shapes will re-trace every call",
+                    self.name, evicted, self.maxsize, self.evictions)
+            return fn
+        self.hits += 1
+        self._entries.move_to_end(key)
+        return fn
+
+    def cache_info(self) -> _CacheInfo:
+        return _CacheInfo(self.hits, self.misses, self.maxsize,
+                          len(self._entries), self.evictions)
+
+    def cache_clear(self) -> None:
+        self._entries.clear()
+        self.hits = self.misses = self.evictions = 0
+
+    def stats(self) -> dict:
+        return {"name": self.name, "hits": self.hits,
+                "misses": self.misses, "evictions": self.evictions,
+                "currsize": len(self._entries), "maxsize": self.maxsize}
+
+
+def compile_cache_stats() -> list[dict]:
+    """Hit/miss/eviction counters of every registered kernel cache (the
+    batched sweep kernel, the fleet kernel) — one dict per cache, in
+    registration order.  Benchmarks surface these in their JSON rows so
+    retrace behavior is part of the tracked perf trajectory."""
+    return [c.stats() for c in CompileCache._registry]
 
 _DIMS = ("t_s_us", "t_l_us", "m", "n_queues", "rate_mpps", "seed")
 
@@ -350,12 +429,11 @@ class BatchStats:
         return len(self.grid)
 
 
-@lru_cache(maxsize=16)
-def _compiled_sweep(n_slots: int, slot_us: float, m_max: int, q_max: int,
-                    mu: float, capacity: float, wake_cost_us: float,
-                    sleep_params: tuple, interference_params: tuple,
-                    n_seg: int = 0, n_windows: int = 0,
-                    window_us: float = 0.0):
+def _build_sweep(n_slots: int, slot_us: float, m_max: int, q_max: int,
+                 mu: float, capacity: float, wake_cost_us: float,
+                 sleep_params: tuple, interference_params: tuple,
+                 n_seg: int = 0, n_windows: int = 0,
+                 window_us: float = 0.0):
     """Build + jit the vmapped fixed-slot kernel for one static shape.
 
     ``n_seg > 0`` compiles the nonstationary variant: each point carries
@@ -553,6 +631,10 @@ def _compiled_sweep(n_slots: int, slot_us: float, m_max: int, q_max: int,
         return S, win_acc
 
     return jax.jit(jax.vmap(one_point))
+
+
+_compiled_sweep = CompileCache(_build_sweep, maxsize=64,
+                               name="batched._compiled_sweep")
 
 
 _EVENT_ENGINE_ONLY_FIELDS = ("timeseries_bin_us",)

@@ -276,6 +276,7 @@ def build_operating_table(
     spot_check_rel: float = 0.25,
     sweep=None,
     schedule_check=None,
+    fleet=None,
 ) -> OperatingTable:
     """Sweep (t_s x t_l x m x rho x seed) through the batched engine and
     distill an ``OperatingTable``: per load, the minimum-CPU point whose
@@ -298,6 +299,17 @@ def build_operating_table(
     ``BatchStats`` for exactly this grid (same axes, same cfg/slot_us —
     e.g. one the caller also uses for frontier analysis) so the batch
     isn't simulated twice; its grid shape is validated.
+
+    ``fleet`` (a ``repro.runtime.simcore.FleetConfig``) calibrates a
+    *per-host* table for fleet deployment: each table rung still labels
+    a per-host rho (the host sweep is unchanged — LB shares decide how
+    much of the fleet-aggregate load a host sees), but the latency
+    budget a host is given shrinks by the fleet's share-weighted
+    topology delay (``FleetConfig.mean_topo_delay_us`` — rack cost plus
+    bottleneck-link M/M/1 wait) evaluated at the fleet-aggregate peak
+    rate ``max(rhos) * mu * n_hosts``, so "host meets target" composes
+    into "fleet request meets target" end to end.  The fleet config is
+    recorded in the table's ``environment`` under ``"fleet"``.
 
     ``schedule_check`` (a ``repro.runtime.schedule.LoadSchedule``)
     additionally validates the finished table *closed-loop under
@@ -322,6 +334,17 @@ def build_operating_table(
             "nonstationary load instead")
     rhos = np.atleast_1d(np.asarray(rhos, dtype=np.float64))
     mu = cfg.service_rate_mpps
+    if fleet is not None:
+        fleet.validate()
+        peak_fleet_mpps = float(np.max(rhos)) * mu * fleet.n_hosts
+        topo_us = fleet.mean_topo_delay_us(peak_fleet_mpps)
+        if topo_us >= target_mean_latency_us:
+            raise ValueError(
+                f"fleet topology delay ({topo_us:.2f}us at peak "
+                f"{peak_fleet_mpps:.2f} Mpps) consumes the whole "
+                f"{target_mean_latency_us:g}us latency target — no host "
+                f"budget remains")
+        target_mean_latency_us = target_mean_latency_us - topo_us
     grid = SweepGrid.product(t_s_us=t_s_grid, t_l_us=t_l_grid, m=m_grid,
                              n_queues=(cfg.n_queues,),
                              rate_mpps=rhos * mu, seeds=seeds)
@@ -383,9 +406,12 @@ def build_operating_table(
             cpu_fraction=float(cpu[i, j, l, 0, k]),
             loss_fraction=float(loss[i, j, l, 0, k]), meets_target=met))
 
+    env = asdict(cfg)
+    if fleet is not None:
+        env["fleet"] = asdict(fleet)
     table = OperatingTable(target_mean_latency_us=target_mean_latency_us,
                            service_rate_mpps=mu, points=tuple(points),
-                           environment=asdict(cfg))
+                           environment=env)
 
     if spot_check:
         # contention-honest: the exact engine re-examines selected points

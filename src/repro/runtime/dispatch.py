@@ -22,7 +22,13 @@ Implementations:
     hashed to queues, so per-queue load inherits the skew of wherever
     the elephant flows land (``key=`` gives stable request affinity);
   - ``LeastLoadedDispatch`` idealized load balancer: arrivals water-fill
-    the shortest backlogs (the upper bound NIC hashing can't reach).
+    the shortest backlogs (the upper bound NIC hashing can't reach);
+  - ``WeightedDispatch``    weighted round-robin: fixed per-queue traffic
+    shares (a fleet balancer splitting across heterogeneous replicas);
+  - ``StaleLeastLoadedDispatch``  least-loaded against a backlog snapshot
+    that refreshes only every ``refresh_every`` decisions — the finite-
+    polling-rate balancer whose stale signal herds arrivals onto a
+    replica that *was* idle (the regime the fleet tier studies).
 """
 
 from __future__ import annotations
@@ -37,6 +43,8 @@ __all__ = [
     "RoundRobinDispatch",
     "FlowHashDispatch",
     "LeastLoadedDispatch",
+    "WeightedDispatch",
+    "StaleLeastLoadedDispatch",
 ]
 
 
@@ -178,3 +186,98 @@ class LeastLoadedDispatch:
 
     def pick(self, seq: int, backlogs, key=None) -> int:
         return int(np.argmin(np.asarray(backlogs)))
+
+
+class WeightedDispatch:
+    """Weighted round-robin: queue i receives a fixed ``weights[i]``
+    share of arrivals.  Aggregate counts split by largest remainder
+    (deterministic, so equal-seed runs reproduce); per-arrival picks
+    walk the cumulative weights with a rotating fractional cursor, the
+    classic smooth-WRR spread without bursts onto one queue."""
+
+    name = "weighted"
+
+    def __init__(self, weights):
+        w = np.asarray(weights, dtype=np.float64)
+        if w.size < 1 or np.min(w) <= 0:
+            raise ValueError("weights must be positive and non-empty")
+        self._weights = w / w.sum()
+        self._cum = np.cumsum(self._weights)
+        self._n = w.size
+        self._frac = np.zeros(w.size)
+
+    @property
+    def queue_weights(self) -> np.ndarray:
+        return self._weights.copy()
+
+    def reset(self, n_queues: int, rng: np.random.Generator) -> None:
+        if int(n_queues) != self._n:
+            raise ValueError(
+                f"WeightedDispatch built for {self._n} queues, "
+                f"run has {n_queues}")
+        self._frac = np.zeros(self._n)
+
+    def split(self, n: int, backlogs: np.ndarray) -> np.ndarray:
+        if n <= 0:
+            return np.zeros(self._n, dtype=np.int64)
+        # carry fractional credit across calls so small batches still
+        # honor the shares in the long run
+        ideal = n * self._weights + self._frac
+        alloc = np.floor(ideal).astype(np.int64)
+        short = int(n - alloc.sum())
+        if short > 0:
+            idx = np.argsort(-(ideal - alloc), kind="stable")[:short]
+            alloc[idx] += 1
+        self._frac = ideal - alloc
+        return alloc
+
+    def pick(self, seq: int, backlogs, key=None) -> int:
+        # deterministic low-discrepancy walk over the cumulative shares
+        u = ((seq + 0.5) * 0.6180339887498949) % 1.0
+        return int(np.searchsorted(self._cum, u, side="right")
+                   .clip(0, self._n - 1))
+
+
+class StaleLeastLoadedDispatch:
+    """Least-loaded routing on a *stale* backlog signal: the snapshot the
+    decisions use refreshes only every ``refresh_every`` dispatch calls,
+    modeling a balancer that polls replica queue depths at a finite
+    rate.  ``refresh_every=1`` degenerates to ``LeastLoadedDispatch``
+    exactly; large values reproduce the herd-to-the-idle-replica
+    misbehavior of real stale-signal balancers."""
+
+    name = "stale-least-loaded"
+
+    def __init__(self, refresh_every: int = 64):
+        if refresh_every < 1:
+            raise ValueError("refresh_every must be >= 1")
+        self.refresh_every = int(refresh_every)
+        self._fresh = LeastLoadedDispatch()
+        self._n = 1
+        self._snapshot = np.zeros(1)
+        self._calls = 0
+
+    def reset(self, n_queues: int, rng: np.random.Generator) -> None:
+        self._n = int(n_queues)
+        self._fresh.reset(n_queues, rng)
+        self._snapshot = np.zeros(self._n)
+        self._calls = 0
+
+    def _maybe_refresh(self, backlogs) -> None:
+        if self._calls % self.refresh_every == 0:
+            self._snapshot = np.asarray(backlogs, dtype=np.float64).copy()
+        self._calls += 1
+
+    def split(self, n: int, backlogs: np.ndarray) -> np.ndarray:
+        self._maybe_refresh(backlogs)
+        out = self._fresh.split(n, self._snapshot)
+        # decisions feed back into the *snapshot* (the balancer knows
+        # what it sent), just not into the true backlogs it cannot see
+        self._snapshot = self._snapshot + out
+        return out
+
+    def pick(self, seq: int, backlogs, key=None) -> int:
+        self._maybe_refresh(backlogs)
+        q = int(np.argmin(self._snapshot))
+        self._snapshot[q] += 1.0
+        return q

@@ -55,6 +55,8 @@ __all__ = [
     "PERFECT_SLEEP_MODEL",
     "SimRunConfig",
     "simulate_run",
+    "simulate_fleet_run",
+    "fleet_tail_reference",
 ]
 
 
@@ -448,3 +450,107 @@ def _simulate_spin(policy, workload, cfg: SimRunConfig) -> RunStats:
         vacations_us=np.zeros(1), busies_us=np.asarray([cfg.duration_us]),
         n_v=np.zeros(1),
     )
+
+
+def simulate_fleet_run(policy_factory, rate_mpps: float,
+                       cfg: SimRunConfig, fleet, *,
+                       workload_factory=None) -> list[RunStats]:
+    """Exact event-engine reference for a fleet: one ``simulate_run``
+    per host at that host's *static* LB share of the fleet-aggregate
+    Poisson stream (``FleetConfig.shares()`` — Poisson thinning is
+    exact for uniform/weighted splits; ``least-loaded`` is a batched-
+    engine-only dynamic policy and uses its uniform long-run share
+    here).  Host ``h`` runs with seed ``cfg.seed + h``, matching the
+    fleet kernel's per-host key contract, so a fleet row and this
+    reference draw host-equivalent randomness.
+
+    ``policy_factory(h)`` must return a FRESH policy object per host
+    (policies are stateful); ``workload_factory(host_rate_mpps)``
+    defaults to ``PoissonWorkload``.  Returns the per-host ``RunStats``
+    list — roll it up with ``RunStats.merge_all``, or feed it to
+    ``fleet_tail_reference`` for the exact hedged-tail distribution.
+    """
+    from dataclasses import replace as _replace
+
+    from .workload import PoissonWorkload
+
+    fleet.validate()
+    if workload_factory is None:
+        workload_factory = PoissonWorkload
+    shares = fleet.shares()
+    out = []
+    for h in range(fleet.n_hosts):
+        cfg_h = _replace(cfg, seed=cfg.seed + h)
+        out.append(simulate_run(policy_factory(h),
+                                workload_factory(rate_mpps * shares[h]),
+                                cfg_h))
+    return out
+
+
+def fleet_tail_reference(host_stats, fleet, hedge_deadline_us: float, *,
+                         n_samples: int = 200_000,
+                         seed: int = 0) -> np.ndarray:
+    """Exact first-completion-wins hedging over measured per-host
+    latency samples — the reference the fluid/closed-form hedged-tail
+    model is parity-pinned against.
+
+    Per simulated request: pick a host by served share, draw a base
+    latency from that host's empirical reservoir
+    (``host_stats[h].latency_us``), add its topology delay (rack cost
+    plus, for far hosts, an Exp-distributed share of the bottleneck-link
+    M/M/1 wait at the measured far-rack offered rate).  If the total
+    exceeds the hedge deadline D, duplicate to a second host drawn from
+    the other replicas and finish at ``min(original, D + partner's full
+    latency)`` — first completion wins, exactly.  ``D <= 0`` disables
+    hedging.  Returns the ``n_samples`` end-to-end latencies; quantile
+    them directly.
+    """
+    fleet.validate()
+    if len(host_stats) != fleet.n_hosts:
+        raise ValueError("need one RunStats per host")
+    rng = np.random.default_rng(seed)
+    pools = [np.asarray(rs.latency_us, dtype=np.float64)
+             for rs in host_stats]
+    if any(p.size == 0 for p in pools):
+        raise ValueError("every host needs latency samples "
+                         "(run the event engine, not a spin override)")
+    served = np.asarray([max(rs.items, 1) for rs in host_stats],
+                        dtype=np.float64)
+    weight = served / served.sum()
+    far = fleet.far_mask()
+    duration_us = host_stats[0].duration_ns / 1e3
+    far_rate = float(sum(rs.offered for rs, f in zip(host_stats, far)
+                         if f)) / duration_us
+    link_wait_us = fleet.link_wait_us(far_rate)
+    cost = fleet.host_cost_us()
+
+    def draw(hosts: np.ndarray) -> np.ndarray:
+        """End-to-end latency samples for the given host choices."""
+        base = np.empty(hosts.size)
+        for h in range(fleet.n_hosts):
+            m = hosts == h
+            if m.any():
+                base[m] = rng.choice(pools[h], size=int(m.sum()))
+        topo = cost[hosts].astype(np.float64)
+        if link_wait_us > 0.0:
+            f = far[hosts]
+            topo[f] += rng.exponential(link_wait_us, size=int(f.sum()))
+        return base + topo
+
+    hosts = rng.choice(fleet.n_hosts, size=n_samples, p=weight)
+    lat = draw(hosts)
+    d = float(hedge_deadline_us)
+    if d > 0.0 and fleet.n_hosts > 1:
+        slow = lat > d
+        n_slow = int(slow.sum())
+        if n_slow:
+            # partner: an independent draw from the OTHER replicas,
+            # renormalized served-share weights
+            pw = np.tile(weight, (n_slow, 1))
+            pw[np.arange(n_slow), hosts[slow]] = 0.0
+            pw /= pw.sum(axis=1, keepdims=True)
+            cum = np.cumsum(pw, axis=1)
+            u = rng.random(n_slow)
+            partners = (u[:, None] > cum).sum(axis=1).astype(np.int64)
+            lat[slow] = np.minimum(lat[slow], d + draw(partners))
+    return lat

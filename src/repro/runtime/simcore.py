@@ -33,6 +33,7 @@ __all__ = [
     "NANOSLEEP_MODEL",
     "PERFECT_SLEEP_MODEL",
     "SimRunConfig",
+    "FleetConfig",
     "EngineSetup",
     "WindowAccum",
     "prepare_run",
@@ -141,6 +142,118 @@ class SimRunConfig:
         per_wake = self.interference_prob * self.interference_mean_us
         stall = self.stall_rate_per_us * self.stall_mean_us ** 2
         return per_wake + stall
+
+
+_LB_POLICIES = ("uniform", "weighted", "least-loaded")
+
+# M/M/1 link waits blow up as the far-rack rate approaches the link
+# rate; the fluid model clamps the wait at utilization 98% (a 50x
+# service time) so a momentarily oversubscribed link yields a large
+# finite delay instead of a NaN that poisons the whole sweep point
+_LINK_UTIL_CLAMP = 0.98
+
+
+@dataclass(frozen=True)
+class FleetConfig:
+    """Fleet-level environment: N replica hosts behind one load balancer.
+
+    Everything *outside* a single host — how the shared arrival stream
+    is split across replicas, and what the network between the balancer
+    and each rack costs:
+
+      - ``lb``: arrival-split policy.  ``uniform`` and ``weighted`` are
+        static shares; ``least-loaded`` follows a softmin over a
+        backlog snapshot that refreshes only every ``lb_stale_us``
+        (a balancer polling replica queue depths at a finite rate —
+        the stale-signal regime where load balancing misfires).
+      - topology: the first ``round(far_fraction * n_hosts)`` hosts sit
+        in a far rack.  Every packet pays its rack's constant cost
+        (``near_cost_us`` / ``far_cost_us``); far packets additionally
+        queue on a shared bottleneck link modeled M/M/1-style — wait
+        ``1 / (link_rate_mpps - far_rate)``, clamped near saturation
+        (``link_rate_mpps = 0`` means no bottleneck).  Network delay is
+        charged to a separate per-host accumulator, not the host's
+        queue-depth integral, so host-level parity vs the single-host
+        engines is unaffected.
+
+    Hedge deadlines are *operating-point* knobs, not environment: they
+    live per sweep point on ``FleetGrid``, next to (T_S, T_L, M).
+    """
+
+    n_hosts: int = 1
+    lb: str = "uniform"
+    host_weights: tuple = ()           # traffic shares, lb="weighted" only
+    lb_stale_us: float = 0.0           # least-loaded snapshot refresh lag
+    lb_softness_pkts: float = 4.0      # softmin temperature (packets)
+    far_fraction: float = 0.0
+    near_cost_us: float = 0.0
+    far_cost_us: float = 0.0
+    link_rate_mpps: float = 0.0        # shared far-rack bottleneck (0 = none)
+
+    def validate(self) -> "FleetConfig":
+        if self.n_hosts < 1:
+            raise ValueError("FleetConfig.n_hosts must be >= 1")
+        if self.lb not in _LB_POLICIES:
+            raise ValueError(f"FleetConfig.lb must be one of {_LB_POLICIES}")
+        if self.lb == "weighted":
+            if len(self.host_weights) != self.n_hosts:
+                raise ValueError("host_weights must have one entry per host")
+            if min(self.host_weights) <= 0:
+                raise ValueError("host_weights must be positive")
+        elif self.host_weights:
+            raise ValueError("host_weights only apply to lb='weighted'")
+        if not 0.0 <= self.far_fraction <= 1.0:
+            raise ValueError("far_fraction must be in [0, 1]")
+        if min(self.near_cost_us, self.far_cost_us,
+               self.link_rate_mpps, self.lb_stale_us) < 0:
+            raise ValueError("fleet costs/rates must be >= 0")
+        if self.lb_softness_pkts <= 0:
+            raise ValueError("lb_softness_pkts must be > 0")
+        return self
+
+    # -- static split ----------------------------------------------------------
+    def shares(self) -> np.ndarray:
+        """Static per-host traffic shares.  ``least-loaded`` has no
+        static split (it reacts to backlog); its long-run share over
+        identical hosts is uniform, which is what the exact event-engine
+        reference path uses."""
+        if self.lb == "weighted":
+            w = np.asarray(self.host_weights, dtype=np.float64)
+            return w / w.sum()
+        return np.full(self.n_hosts, 1.0 / self.n_hosts)
+
+    # -- topology --------------------------------------------------------------
+    def far_hosts(self) -> int:
+        return int(round(self.far_fraction * self.n_hosts))
+
+    def far_mask(self) -> np.ndarray:
+        """Host h is in the far rack iff h < far_hosts() — a fixed
+        assignment shared by the batched kernel and the event reference."""
+        return np.arange(self.n_hosts) < self.far_hosts()
+
+    def host_cost_us(self) -> np.ndarray:
+        return np.where(self.far_mask(), self.far_cost_us,
+                        self.near_cost_us)
+
+    def link_wait_us(self, far_rate_mpps: float) -> float:
+        """M/M/1-style mean wait on the shared far-rack link at the given
+        far-rack arrival rate, clamped near saturation."""
+        if self.link_rate_mpps <= 0.0 or self.far_hosts() == 0:
+            return 0.0
+        gap = max(self.link_rate_mpps - far_rate_mpps,
+                  (1.0 - _LINK_UTIL_CLAMP) * self.link_rate_mpps)
+        return 1.0 / gap
+
+    def mean_topo_delay_us(self, fleet_rate_mpps: float) -> float:
+        """Traffic-weighted mean network delay per packet at the given
+        fleet aggregate rate — the share of the latency budget the
+        network consumes before any host-level tuning can help (used by
+        calibration's fleet pass-through to shrink the host target)."""
+        shares = self.shares()
+        far = self.far_mask()
+        far_rate = float(fleet_rate_mpps * shares[far].sum())
+        per_host = self.host_cost_us() + far * self.link_wait_us(far_rate)
+        return float((shares * per_host).sum())
 
 
 @dataclass

@@ -23,7 +23,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 __all__ = ["Reservoir", "QueueStats", "RunStats", "WindowedSeries",
-           "TrackingStats"]
+           "TrackingStats", "hedged_latency_quantile"]
 
 
 class Reservoir:
@@ -113,6 +113,64 @@ class Reservoir:
                                      replace=False)
         self._buf = ([self._buf[i] for i in pick_s]
                      + [float(other._buf[i]) for i in pick_o])
+        self.count = total
+        return self
+
+    def merge_all(self, others) -> "Reservoir":
+        """n-way weighted union in ONE buffer rebuild.
+
+        Distributionally equivalent to left-folding pairwise ``merge``
+        over ``others`` — every value seen by any side ends up in the
+        merged sample with (approximately) equal probability — but a
+        1000-shard rollup does a single multinomial slot allocation and
+        one sampling pass instead of O(n) full buffer re-copies.  In
+        place; returns ``self``.
+
+        Slots are allocated across sides by a multinomial draw
+        proportional to each side's stream count, clipped to what each
+        buffer actually holds, with the clipped excess handed to sides
+        that still have unsampled values (largest-room first).
+        """
+        parts = [o for o in others if o.count > 0]
+        if not parts:
+            return self
+        counts = np.asarray([self.count] + [o.count for o in parts],
+                            dtype=np.float64)
+        bufs = [self._buf] + [o._buf for o in parts]
+        lens = np.asarray([len(b) for b in bufs], dtype=np.int64)
+        total = int(counts.sum())
+        if total <= self.capacity and int(counts.sum()) == int(lens.sum()):
+            # every side still lossless and the union fits: exact concat
+            merged: list[float] = list(self._buf)
+            for b in bufs[1:]:
+                merged.extend(float(v) for v in b)
+            self._buf = merged
+            self.count = total
+            return self
+        k = min(self.capacity, int(lens.sum()))
+        alloc = self._np_rng.multinomial(k, counts / counts.sum())
+        for _ in range(len(bufs)):
+            excess = int(np.maximum(alloc - lens, 0).sum())
+            if excess == 0:
+                break
+            alloc = np.minimum(alloc, lens)
+            room = lens - alloc
+            for i in np.argsort(-room):
+                give = min(excess, int(room[i]))
+                alloc[i] += give
+                excess -= give
+                if excess == 0:
+                    break
+        buf: list[float] = []
+        for n_i, b in zip(alloc.tolist(), bufs, strict=True):
+            if n_i == 0:
+                continue
+            if n_i >= len(b):
+                buf.extend(float(v) for v in b)
+            else:
+                pick = self._np_rng.choice(len(b), size=n_i, replace=False)
+                buf.extend(float(b[j]) for j in pick)
+        self._buf = buf
         self.count = total
         return self
 
@@ -401,6 +459,20 @@ class QueueStats:
             self.latency_us.merge(other.latency_us)
         return self
 
+    def merge_all(self, others) -> "QueueStats":
+        """n-way ``merge``: counters sum once, the latency reservoir does
+        one weighted union (``Reservoir.merge_all``).  In place."""
+        others = list(others)
+        if not others:
+            return self
+        for f in ("offered", "dropped", "serviced", "busy_tries", "cycles"):
+            setattr(self, f,
+                    getattr(self, f) + sum(getattr(o, f) for o in others))
+        if self.latency_us is not None:
+            self.latency_us.merge_all(
+                o.latency_us for o in others if o.latency_us is not None)
+        return self
+
 
 @dataclass
 class RunStats:
@@ -639,6 +711,105 @@ class RunStats:
                 setattr(self, f, _empty())
         return self
 
+    def merge_all(self, others) -> "RunStats":
+        """n-way ``merge`` for cluster rollups: one pass over all shards
+        instead of a left-fold of pairwise merges.  Counters and window
+        accumulators sum once, each latency reservoir family does one
+        weighted union, and cycle-sample arrays concatenate in a single
+        allocation — a 1000-host fleet rollup is O(total data), not
+        O(n) re-copies of an ever-growing buffer.  In place.
+
+        Semantics match folding ``merge`` exactly for all counters and
+        reservoirs; the only deliberate difference is the binned
+        rho/T_S series, which take an unweighted mean over all shards
+        (the fold's nested pairwise average weights early shards less).
+        """
+        others = list(others)
+        if not others:
+            return self
+        # capture pre-merge items for the analytic-override weighting
+        items_w = [self.items] + [o.items for o in others]
+        for f in ("wakeups", "cycles", "busy_tries", "items", "offered",
+                  "dropped", "awake_ns", "app_ops", "app_cpu_ns",
+                  "drain_truncations", "latency_area_us"):
+            setattr(self, f,
+                    getattr(self, f) + sum(getattr(o, f) for o in others))
+        self.started_ns = min(self.started_ns,
+                              *(o.started_ns for o in others))
+        self.stopped_ns = max(self.stopped_ns,
+                              *(o.stopped_ns for o in others))
+        for f in ("backend", "policy", "workload", "schedule"):
+            vals = {getattr(self, f)} | {getattr(o, f) for o in others}
+            if len(vals) > 1:
+                setattr(self, f, "mixed")
+        if self.latency_override or any(o.latency_override for o in others):
+            sides = [self] + others
+            views = [s.latency_override or {
+                "mean": s.mean_latency_us, "p99": s.p99_latency_us,
+                "worst": s.worst_latency_us} for s in sides]
+            tot = max(sum(items_w), 1)
+            self.latency_override = {
+                "mean": sum(v["mean"] * w
+                            for v, w in zip(views, items_w, strict=True))
+                        / tot,
+                "p99": max(v["p99"] for v in views),
+                "worst": max(v["worst"] for v in views),
+            }
+        else:
+            self.latency_us.merge_all(o.latency_us for o in others)
+        self.feeder_lag_us = max(self.feeder_lag_us,
+                                 *(o.feeder_lag_us for o in others))
+        donors = [o for o in others if o.per_queue]
+        if donors:
+            if not self.per_queue:
+                self.per_queue = copy.deepcopy(donors[0].per_queue)
+                donors = donors[1:]
+            by_q = {q.queue: q for q in self.per_queue}
+            grouped: dict[int, list[QueueStats]] = {}
+            for o in donors:
+                for oq in o.per_queue:
+                    if oq.queue in by_q:
+                        grouped.setdefault(oq.queue, []).append(oq)
+                    else:
+                        q = copy.deepcopy(oq)
+                        self.per_queue.append(q)
+                        by_q[oq.queue] = q
+            for queue, slices in grouped.items():
+                by_q[queue].merge_all(slices)
+            self.per_queue.sort(key=lambda q: q.queue)
+        win_donors = [o.windows for o in others if o.windows is not None]
+        if self.windows is None and win_donors:
+            self.windows = copy.deepcopy(win_donors[0])
+            win_donors = win_donors[1:]
+        if self.windows is not None:
+            try:
+                for w in win_donors:
+                    self.windows.merge(w)
+            except ValueError:
+                self.windows = None
+        for f in ("vacations_us", "busies_us", "n_v"):
+            setattr(self, f, np.concatenate(
+                [getattr(self, f)] + [getattr(o, f) for o in others]))
+        same_grid = all(
+            self.series_t_us.size
+            and o.series_t_us.shape == self.series_t_us.shape
+            and np.array_equal(o.series_t_us, self.series_t_us)
+            for o in others)
+        if same_grid and self.series_t_us.size:
+            n_sides = 1 + len(others)
+            for f in ("tput_series_mpps", "offered_series_mpps"):
+                setattr(self, f, getattr(self, f)
+                        + sum(getattr(o, f) for o in others))
+            for f in ("rho_series", "ts_series"):
+                setattr(self, f, (getattr(self, f)
+                                  + sum(getattr(o, f) for o in others))
+                        / n_sides)
+        else:
+            for f in ("rho_series", "ts_series", "tput_series_mpps",
+                      "offered_series_mpps", "series_t_us"):
+                setattr(self, f, _empty())
+        return self
+
     def summary(self) -> dict:
         """Flat dict of the headline numbers (benchmark CSV rows, logs)."""
         if self.drain_truncations:
@@ -661,3 +832,86 @@ class RunStats:
             "n_queues": max(len(self.per_queue), 1),
             "drain_truncations": self.drain_truncations,
         }
+
+
+def _fleet_survival(x: np.ndarray, mean_us: np.ndarray,
+                    weight: np.ndarray, tail_prob: float,
+                    tail_scale_us: float) -> np.ndarray:
+    """Mixture survival of the per-host two-component latency model at
+    points ``x`` (see ``hedged_latency_quantile``)."""
+    xs = np.maximum(np.asarray(x, dtype=np.float64)[..., None], 0.0)
+    body = np.exp(-xs / mean_us)
+    if tail_prob > 0.0:
+        tail = np.exp(-xs / (mean_us + tail_scale_us))
+        per_host = (1.0 - tail_prob) * body + tail_prob * tail
+    else:
+        per_host = body
+    return per_host @ weight
+
+
+def hedged_latency_quantile(q: float, mean_us, weight=None, *,
+                            hedge_deadline_us: float = 0.0,
+                            tail_prob: float = 0.0,
+                            tail_scale_us: float = 0.0) -> float:
+    """Latency quantile of a replicated fleet under hedged requests.
+
+    Per-host latency follows a two-component survival
+
+        S_h(x) = (1 - p) * exp(-x / L_h) + p * exp(-x / (L_h + c))
+
+    — an exponential body at the host's measured mean sojourn ``L_h``
+    (``mean_us``, per host, network delays included) plus an
+    environment-tail component of mass ``p = tail_prob`` at scale
+    ``c = tail_scale_us`` (requests that land in a correlated stall
+    window; pass the host's stalled-time fraction and stall mean).  The
+    fleet distribution is the served-share-weighted mixture over hosts.
+
+    Hedging with deadline ``D = hedge_deadline_us`` duplicates a request
+    that has not completed by ``D`` to an independent replica drawn from
+    the fleet mixture; first completion wins, so beyond the deadline the
+    survival multiplies by the fresh replica's survival at age x - D:
+
+        S_h^D(x) = S_h(x) * S_fleet(x - D)   for x > D.
+
+    Stall windows are independent across hosts, so this is exactly the
+    mechanism by which hedging collapses the correlated-stall tail: both
+    replicas must stall for the request to stay slow.  Tightening D can
+    only lower S pointwise, hence every quantile is monotonically
+    non-increasing in D — the property the hedging sanity test pins.
+    ``D <= 0`` disables hedging.  Solved by bisection; returns the
+    latency in microseconds at which the fleet CDF reaches ``q``.
+    """
+    if not 0.0 < q < 1.0:
+        raise ValueError("q must be in (0, 1)")
+    mean_us = np.maximum(np.asarray(mean_us, dtype=np.float64).ravel(),
+                         1e-9)
+    if weight is None:
+        weight = np.full(mean_us.size, 1.0 / mean_us.size)
+    else:
+        weight = np.asarray(weight, dtype=np.float64).ravel()
+        weight = weight / max(weight.sum(), 1e-30)
+    d = float(hedge_deadline_us)
+
+    def survival(x):
+        s = _fleet_survival(x, mean_us, weight, tail_prob, tail_scale_us)
+        if d > 0.0:
+            over = np.maximum(np.asarray(x, dtype=np.float64) - d, 0.0)
+            partner = _fleet_survival(over, mean_us, weight, tail_prob,
+                                      tail_scale_us)
+            s = np.where(np.asarray(x) > d, s * partner, s)
+        return s
+
+    target = 1.0 - q
+    hi = float(np.max(mean_us) + tail_scale_us) * 4.0 + max(d, 0.0) + 1.0
+    for _ in range(200):
+        if float(survival(hi)) < target:
+            break
+        hi *= 2.0
+    lo = 0.0
+    for _ in range(100):
+        mid = 0.5 * (lo + hi)
+        if float(survival(mid)) > target:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)

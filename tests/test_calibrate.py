@@ -66,6 +66,29 @@ def test_table_records_its_calibration_environment(table):
     assert rt == table
 
 
+def test_fleet_calibration_shrinks_host_budget_and_records_fleet():
+    """A fleet-aware table gives hosts a latency budget shrunk by the
+    share-weighted topology delay at the fleet-aggregate peak rate, and
+    records the FleetConfig in its environment (JSON-safe)."""
+    from repro.runtime import FleetConfig, OperatingTable
+
+    fleet = FleetConfig(n_hosts=8, far_fraction=0.5, near_cost_us=1.0,
+                        far_cost_us=3.0, link_rate_mpps=200.0)
+    table = _tiny_table(fleet=fleet)
+    cfg = SimRunConfig(duration_us=30_000.0)
+    topo = fleet.mean_topo_delay_us(0.65 * cfg.service_rate_mpps * 8)
+    assert topo > 0.0
+    assert table.target_mean_latency_us == pytest.approx(15.0 - topo)
+    assert table.environment["fleet"]["n_hosts"] == 8
+    assert table.environment["fleet"]["far_fraction"] == 0.5
+    rt = OperatingTable.from_json(table.to_json())
+    assert rt.environment["fleet"]["link_rate_mpps"] == 200.0
+    # a topology that eats the whole budget is rejected loudly
+    greedy = FleetConfig(n_hosts=8, far_fraction=1.0, far_cost_us=20.0)
+    with pytest.raises(ValueError, match="latency target"):
+        _tiny_table(fleet=greedy)
+
+
 def test_noisy_host_calibration_is_contention_honest():
     """Tentpole: build_operating_table in an interference environment
     (a) records that environment, (b) spot-checks against the event

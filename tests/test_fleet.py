@@ -1,0 +1,359 @@
+"""Fleet engine: parity vs the single-host engines, hedging sanity,
+LB/topology direction, device sharding, and the compile cache — the
+acceptance criteria of the fleet-scale batched-simulation tier.
+
+The strongest pin is bit-exactness: under uniform round-robin with
+topology and hedging off, host ``h`` of a fleet row seeded ``s`` IS the
+single-host batched kernel at ``rate/H`` seeded ``s + h`` (same PRNG
+stream by construction), so fleet-vs-event parity inherits the batched
+engine's documented bands rather than needing new ones.
+
+Run with ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the CI
+fleet-smoke job does) to exercise the shard_map path for real; on one
+device the ``shard=True`` parametrizations degenerate to pure vmap and
+still must agree.
+"""
+
+import logging
+
+import numpy as np
+import pytest
+
+from repro.core import MetronomeConfig
+from repro.runtime import (
+    FleetConfig,
+    FleetGrid,
+    MetronomePolicy,
+    Reservoir,
+    RunStats,
+    SimRunConfig,
+    SweepGrid,
+    fleet_tail_reference,
+    hedged_latency_quantile,
+    simulate_batch,
+    simulate_fleet,
+    simulate_fleet_run,
+)
+
+# the batched engine's documented quiet-region parity bands
+# (tests/test_batched_engine.py pins them engine-vs-engine; the fleet
+# inherits them through per-host bit-exactness)
+LAT_ABS_US, LAT_REL = 1.5, 0.12
+CPU_ABS, CPU_REL = 0.02, 0.05
+
+MU = 29.76
+
+
+def _fgrid(fleet, *, rate_per_host=0.4 * MU, hedge=(0.0,), seeds=(3,),
+           t_s=12.0):
+    return FleetGrid.product(
+        fleet=fleet, t_s_us=(t_s,), t_l_us=(500.0,), m=(3,),
+        rate_mpps=(rate_per_host * fleet.n_hosts,), seeds=seeds,
+        hedge_deadline_us=hedge)
+
+
+# ---------------------------------------------------------------------------
+# FleetConfig / FleetGrid surface
+# ---------------------------------------------------------------------------
+
+def test_fleet_config_validates():
+    with pytest.raises(ValueError):
+        FleetConfig(n_hosts=0).validate()
+    with pytest.raises(ValueError):
+        FleetConfig(n_hosts=2, lb="magic").validate()
+    with pytest.raises(ValueError):
+        FleetConfig(n_hosts=3, lb="weighted",
+                    host_weights=(1.0, 2.0)).validate()
+    with pytest.raises(ValueError):
+        FleetConfig(n_hosts=2, far_fraction=1.5).validate()
+    f = FleetConfig(n_hosts=4, lb="weighted",
+                    host_weights=(1.0, 1.0, 2.0, 4.0)).validate()
+    assert f.shares() == pytest.approx([0.125, 0.125, 0.25, 0.5])
+    assert FleetConfig(n_hosts=4, far_fraction=0.5).far_hosts() == 2
+
+
+def test_fleet_grid_product_and_points():
+    fleet = FleetConfig(n_hosts=8)
+    fg = FleetGrid.product(fleet=fleet, t_s_us=(8.0, 16.0),
+                           t_l_us=(500.0,), rate_mpps=(40.0,),
+                           hedge_deadline_us=(0.0, 25.0))
+    assert len(fg) == 4
+    assert fg.shape == (2, 1, 1, 1, 1, 1, 2)
+    p = fg.point(1)
+    assert p["hedge_deadline_us"] == 25.0
+    assert p["n_hosts"] == 8 and p["lb"] == "uniform"
+    fg2 = FleetGrid.of_points(
+        [dict(t_s_us=8.0, t_l_us=500.0, rate_mpps=40.0,
+              hedge_deadline_us=30.0),
+         dict(t_s_us=16.0, t_l_us=500.0, rate_mpps=40.0)],
+        fleet=fleet)
+    assert list(fg2.hedge_deadline_us) == [30.0, 0.0]
+
+
+# ---------------------------------------------------------------------------
+# Parity: fleet host h == single-host batched run seeded s + h (exact),
+# and == merged event-engine hosts (within the documented bands)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shard", [False, True])
+def test_fleet_hosts_bit_exact_vs_single_host_batched(shard):
+    """Uniform RR, no topology, no hedging: every fleet host replays the
+    single-host batched kernel at rate/H with seed s+h, bit for bit."""
+    H, seed, rate_h = 4, 11, 0.45 * MU
+    cfg = SimRunConfig(duration_us=30_000.0)
+    fs = simulate_fleet(_fgrid(FleetConfig(n_hosts=H),
+                               rate_per_host=rate_h, seeds=(seed,)),
+                        cfg, slot_us=1.0, shard=shard)
+    bs = simulate_batch(
+        SweepGrid.of_points([dict(t_s_us=12.0, t_l_us=500.0, m=3,
+                                  rate_mpps=rate_h, seed=seed + h)
+                             for h in range(H)]),
+        cfg, slot_us=1.0)
+    np.testing.assert_array_equal(fs.serviced[0], bs.serviced)
+    np.testing.assert_array_equal(fs.lat_area[0], bs.lat_area)
+    np.testing.assert_array_equal(fs.awake_us[0], bs.awake_us)
+    assert float(fs.topo_area[0].sum()) == 0.0
+    assert float(fs.hedge_dup[0].sum()) == 0.0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("shard", [False, True])
+def test_fleet_matches_merged_event_engine_hosts(shard):
+    """A uniform-RR fleet of k identical hosts agrees with the n-way
+    ``RunStats.merge_all`` of k event-engine runs at rate/k (seeds
+    s..s+k-1) within the quiet parity bands."""
+    H, seed, rate_h = 4, 5, 0.4 * MU
+    cfg = SimRunConfig(duration_us=60_000.0)
+    fs = simulate_fleet(_fgrid(FleetConfig(n_hosts=H),
+                               rate_per_host=rate_h, seeds=(seed,)),
+                        cfg, slot_us=0.5, shard=shard)
+
+    hosts = simulate_fleet_run(
+        lambda h: MetronomePolicy(
+            MetronomeConfig(m=3, v_target_us=12.0, t_long_us=500.0,
+                            ts_min_us=1.0),
+            adaptive=False),
+        rate_h * H, cfg, FleetConfig(n_hosts=H))
+    merged = hosts[0].merge_all(hosts[1:])
+
+    lat_f, lat_e = float(fs.mean_latency_us[0]), merged.mean_sojourn_us
+    assert abs(lat_f - lat_e) <= max(LAT_ABS_US, LAT_REL * lat_e), \
+        (lat_f, lat_e)
+    # both sides' CPU is fleet-total cores (merge sums awake time over
+    # hosts at a fixed wall-clock duration)
+    cpu_f, cpu_e = float(fs.total_cpu_cores[0]), merged.cpu_fraction
+    assert abs(cpu_f - cpu_e) <= H * (CPU_ABS + CPU_REL * cpu_e / H), \
+        (cpu_f, cpu_e)
+    assert float(fs.loss_fraction[0]) < 1e-3
+    assert merged.loss_fraction < 1e-3
+
+
+@pytest.mark.parametrize("n_points", [1, 6])
+def test_shard_path_matches_vmap_path(n_points):
+    """shard=True and shard=False produce identical results (including
+    when the point count does not divide the device count — padding)."""
+    fleet = FleetConfig(n_hosts=3)
+    fg = FleetGrid.product(
+        fleet=fleet, t_s_us=tuple(8.0 + 2.0 * i for i in range(n_points)),
+        t_l_us=(400.0,), rate_mpps=(0.4 * MU * 3,),
+        hedge_deadline_us=(30.0,))
+    cfg = SimRunConfig(duration_us=10_000.0)
+    a = simulate_fleet(fg, cfg, slot_us=1.0, shard=False)
+    b = simulate_fleet(fg, cfg, slot_us=1.0, shard=True)
+    for f in ("serviced", "lat_area", "awake_us", "hedge_dup"):
+        np.testing.assert_allclose(getattr(a, f), getattr(b, f),
+                                   rtol=1e-6, atol=1e-3, err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# Hedging
+# ---------------------------------------------------------------------------
+
+def test_hedging_tightening_deadline_tail_and_cost():
+    """On the noisy cluster, tightening the hedge deadline (above the
+    drain-time scale) drives p99.9 monotonically down while the offered
+    load including duplicates rises strictly — the tail/cost trade."""
+    cfg = SimRunConfig(duration_us=30_000.0, stall_rate_per_us=2.5e-4,
+                       stall_mean_us=150.0)
+    fs = simulate_fleet(_fgrid(FleetConfig(n_hosts=8),
+                               hedge=(0.0, 80.0, 40.0, 20.0)),
+                        cfg, slot_us=1.0)
+    p999 = fs.p999_latency_us
+    offered = fs.offered_with_hedges
+    assert np.all(np.diff(p999) <= 1e-9), p999
+    assert p999[-1] < 0.5 * p999[0], p999
+    assert np.all(np.diff(offered) > 0), offered
+
+
+def test_hedge_deadline_zero_leaves_dynamics_untouched():
+    cfg = SimRunConfig(duration_us=10_000.0)
+    a = simulate_fleet(_fgrid(FleetConfig(n_hosts=4), hedge=(0.0,)),
+                       cfg, slot_us=1.0)
+    b = simulate_fleet(_fgrid(FleetConfig(n_hosts=4), hedge=(-5.0,)),
+                       cfg, slot_us=1.0)
+    np.testing.assert_array_equal(a.serviced, b.serviced)
+    assert float(a.hedge_dup.sum()) == 0.0
+
+
+def test_hedged_quantile_closed_form_pinned_against_exact_mc():
+    """``hedged_latency_quantile`` vs the exact first-completion-wins
+    reference on hosts whose latency IS the model's mixture: within 8%
+    at p99/p99.9 across the deadline ladder."""
+    rng = np.random.default_rng(42)
+    H, N = 3, 60_000
+    L = np.array([8.0, 12.0, 10.0])
+    p, c = 0.05, 120.0
+    hosts = []
+    for h in range(H):
+        tail = rng.random(N) < p
+        lat = rng.exponential(L[h], N)
+        lat[tail] = rng.exponential(L[h] + c, tail.sum())
+        res = Reservoir(capacity=N, seed=h)
+        res.extend(lat)
+        hosts.append(RunStats(backend="synthetic", items=N, offered=N,
+                              awake_ns=int(1e9), latency_us=res))
+    fleet = FleetConfig(n_hosts=H)
+    for d in (0.0, 150.0, 60.0, 25.0):
+        mc = fleet_tail_reference(hosts, fleet, d, n_samples=400_000,
+                                  seed=9)
+        for q in (0.99, 0.999):
+            emp = float(np.percentile(mc, 100 * q))
+            ana = hedged_latency_quantile(q, L, hedge_deadline_us=d,
+                                          tail_prob=p, tail_scale_us=c)
+            assert abs(emp - ana) <= 0.08 * ana, (d, q, emp, ana)
+
+
+def test_hedged_quantile_monotone_in_deadline():
+    means = np.array([9.0, 11.0])
+    qs = [hedged_latency_quantile(0.999, means, hedge_deadline_us=d,
+                                  tail_prob=0.04, tail_scale_us=150.0)
+          for d in (0.0, 200.0, 100.0, 50.0, 25.0)]
+    assert all(a >= b - 1e-9 for a, b in zip(qs, qs[1:])), qs
+
+
+# ---------------------------------------------------------------------------
+# Topology and load balancing
+# ---------------------------------------------------------------------------
+
+def test_topology_adds_network_delay_without_touching_host_queues():
+    cfg = SimRunConfig(duration_us=20_000.0)
+    flat = simulate_fleet(_fgrid(FleetConfig(n_hosts=4)), cfg, slot_us=1.0)
+    topo = simulate_fleet(
+        _fgrid(FleetConfig(n_hosts=4, far_fraction=0.5, near_cost_us=2.0,
+                           far_cost_us=8.0, link_rate_mpps=60.0)),
+        cfg, slot_us=1.0)
+    # host-side dynamics are bit-identical: network delay is charged to
+    # a separate integral, never to the host queues
+    np.testing.assert_array_equal(flat.serviced, topo.serviced)
+    np.testing.assert_array_equal(flat.lat_area, topo.lat_area)
+    assert float(topo.topo_area.sum()) > 0.0
+    # direction and rough size: every packet pays its rack cost, far
+    # packets also wait on the link
+    added = float(topo.mean_latency_us[0] - flat.mean_latency_us[0])
+    assert added > 0.5 * 5.0          # at least half the mean rack cost
+    assert added < 50.0
+
+
+def test_weighted_lb_skew_degrades_vs_uniform():
+    cfg = SimRunConfig(duration_us=20_000.0)
+    H = 4
+    uni = simulate_fleet(_fgrid(FleetConfig(n_hosts=H),
+                                rate_per_host=0.55 * MU), cfg, slot_us=1.0)
+    skew = simulate_fleet(
+        _fgrid(FleetConfig(n_hosts=H, lb="weighted",
+                           host_weights=(4.0, 1.0, 1.0, 1.0)),
+               rate_per_host=0.55 * MU),
+        cfg, slot_us=1.0)
+    # the hot host saturates: worse fleet mean latency (or real loss)
+    assert (float(skew.mean_latency_us[0])
+            > float(uni.mean_latency_us[0])
+            or float(skew.loss_fraction[0]) > 0.01)
+
+
+def test_stale_least_loaded_lag_hurts():
+    cfg = SimRunConfig(duration_us=20_000.0, stall_rate_per_us=2.5e-4,
+                       stall_mean_us=150.0)
+    fresh = simulate_fleet(
+        _fgrid(FleetConfig(n_hosts=4, lb="least-loaded", lb_stale_us=1.0)),
+        cfg, slot_us=1.0)
+    stale = simulate_fleet(
+        _fgrid(FleetConfig(n_hosts=4, lb="least-loaded",
+                           lb_stale_us=4_000.0)),
+        cfg, slot_us=1.0)
+    assert (float(stale.mean_latency_us[0])
+            >= float(fresh.mean_latency_us[0]) - 0.5)
+
+
+# ---------------------------------------------------------------------------
+# Cluster rollups
+# ---------------------------------------------------------------------------
+
+def test_fleet_rollup_through_run_stats_merge_all():
+    cfg = SimRunConfig(duration_us=10_000.0)
+    fs = simulate_fleet(_fgrid(FleetConfig(n_hosts=4)), cfg, slot_us=1.0)
+    hosts = fs.host_run_stats(0)
+    assert len(hosts) == 4
+    rolled = fs.to_run_stats(0)
+    assert rolled.items == sum(int(v) for v in fs.serviced[0])
+    assert rolled.offered == sum(int(v) for v in fs.offered[0])
+    assert rolled.mean_sojourn_us == pytest.approx(
+        float(fs.mean_latency_us[0]), rel=1e-3)
+    assert rolled.latency_override["p99"] == pytest.approx(
+        fs.quantile(0, 0.99))
+
+
+def test_event_fleet_reference_contract():
+    """simulate_fleet_run: per-host seeds s..s+H-1, rates split by the
+    static shares; fleet_tail_reference hedging never hurts the tail."""
+    fleet = FleetConfig(n_hosts=3, lb="weighted",
+                        host_weights=(2.0, 1.0, 1.0))
+    cfg = SimRunConfig(duration_us=20_000.0, seed=9)
+    hosts = simulate_fleet_run(
+        lambda h: MetronomePolicy(MetronomeConfig()), 0.9 * MU, cfg, fleet)
+    assert len(hosts) == 3
+    items = np.asarray([rs.items for rs in hosts], dtype=np.float64)
+    # the 2x-weighted host serves about twice the others' traffic
+    assert items[0] / items[1:].mean() == pytest.approx(2.0, rel=0.25)
+    unhedged = fleet_tail_reference(hosts, fleet, 0.0, n_samples=50_000,
+                                    seed=1)
+    hedged = fleet_tail_reference(hosts, fleet, 40.0, n_samples=50_000,
+                                  seed=1)
+    assert (np.percentile(hedged, 99.9)
+            <= np.percentile(unhedged, 99.9) + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Compile cache
+# ---------------------------------------------------------------------------
+
+def test_compile_cache_counters_and_eviction(caplog):
+    from repro.runtime import CompileCache
+
+    builds = []
+
+    def build(a, b):
+        builds.append((a, b))
+        return a + b
+
+    cc = CompileCache(build, maxsize=2, name="test.cache")
+    assert cc(1, 2) == 3 and cc(1, 2) == 3
+    info = cc.cache_info()
+    assert (info.hits, info.misses, info.evictions) == (1, 1, 0)
+    cc(3, 4)
+    with caplog.at_level(logging.WARNING, logger="repro.runtime.batched"):
+        cc(5, 6)                      # evicts (1, 2), logs it
+    info = cc.cache_info()
+    assert info.evictions == 1 and info.currsize == 2
+    assert any("test.cache" in r.message for r in caplog.records)
+    assert cc(1, 2) == 3              # rebuilt after eviction
+    assert builds.count((1, 2)) == 2
+    stats = cc.stats()
+    assert stats["name"] == "test.cache" and stats["maxsize"] == 2
+
+
+def test_compile_cache_registry_surfaces_fleet_and_batched():
+    from repro.runtime import compile_cache_stats
+
+    names = {s["name"] for s in compile_cache_stats()}
+    assert "batched._compiled_sweep" in names
+    assert "fleet._compiled_fleet_sweep" in names

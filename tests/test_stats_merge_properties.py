@@ -190,3 +190,108 @@ def test_run_stats_merged_latency_quantiles_bounded(lat):
     if arr.size:
         assert float(np.percentile(arr, 99)) <= hi + 1e-12
         assert float(np.percentile(arr, 1)) >= lo - 1e-12
+
+
+# ---------------------------------------------------------------------------
+# merge_all — the n-way rollups the fleet tier leans on
+# ---------------------------------------------------------------------------
+
+shard_lists = st.lists(value_lists, min_size=0, max_size=8)
+
+
+@given(shards=shard_lists, cap=small_caps)
+@settings(max_examples=40, deadline=None)
+def test_reservoir_merge_all_conserves_count_and_bounds(shards, cap):
+    base = _reservoir([], cap)
+    base.merge_all(_reservoir(s, cap, seed=i + 1)
+                   for i, s in enumerate(shards))
+    total = sum(len(s) for s in shards)
+    assert base.count == total
+    assert len(base) == min(cap, total)
+    pool = [v for s in shards for v in s]
+    if pool:
+        arr = np.asarray(base)
+        assert float(arr.min()) >= min(pool) - 1e-12
+        assert float(arr.max()) <= max(pool) + 1e-12
+
+
+@given(shards=shard_lists, cap=small_caps)
+@settings(max_examples=40, deadline=None)
+def test_reservoir_merge_all_matches_sequential_merge_counts(shards, cap):
+    nway = _reservoir([], cap)
+    nway.merge_all(_reservoir(s, cap, seed=i + 1)
+                   for i, s in enumerate(shards))
+    seq = _reservoir([], cap)
+    for i, s in enumerate(shards):
+        seq.merge(_reservoir(s, cap, seed=i + 1))
+    assert nway.count == seq.count
+    assert len(nway) == len(seq)
+
+
+@given(sides=st.lists(st.tuples(counter, counter, counter, value_lists),
+                      min_size=1, max_size=6))
+@settings(max_examples=40, deadline=None)
+def test_queue_stats_merge_all_adds_every_counter(sides):
+    (o0, d0, s0, lat0), rest = sides[0], sides[1:]
+    qa = QueueStats(queue=0, offered=o0, dropped=d0, serviced=s0,
+                    latency_us=_reservoir(lat0, 16))
+    qa.merge_all(QueueStats(queue=0, offered=o, dropped=d, serviced=s,
+                            latency_us=_reservoir(lat, 16, seed=i + 1))
+                 for i, (o, d, s, lat) in enumerate(rest))
+    assert qa.offered == sum(o for o, _, _, _ in sides)
+    assert qa.dropped == sum(d for _, d, _, _ in sides)
+    assert qa.serviced == sum(s for _, _, s, _ in sides)
+    assert qa.latency_us.count == sum(len(lat) for *_, lat in sides)
+
+
+@given(sides=st.lists(st.tuples(counter, counter, counter, counter,
+                                value_lists),
+                      min_size=1, max_size=6))
+@settings(max_examples=30, deadline=None)
+def test_run_stats_merge_all_conserves_counters(sides):
+    runs = [_run_stats(o, d, i_, a, lat, seed=k)
+            for k, (o, d, i_, a, lat) in enumerate(sides)]
+    donors = [copy.deepcopy(r) for r in runs[1:]]
+    head = runs[0]
+    out = head.merge_all(runs[1:])
+    assert out is head
+    assert head.offered == sum(o for o, *_ in sides)
+    assert head.dropped == sum(d for _, d, *_ in sides)
+    assert head.items == sum(i_ for _, _, i_, _, _ in sides)
+    assert head.awake_ns == sum(a for *_, a, _ in sides)
+    assert head.latency_us.count == sum(len(lat) for *_, lat in sides)
+    assert len(head.per_queue) == 2
+    for q in range(2):
+        assert head.per_queue[q].offered == sum(o // 2 for o, *_ in sides)
+    # donors untouched (merge_all deep-copies their per-queue slices)
+    for donor, snap in zip(runs[1:], donors):
+        assert donor.offered == snap.offered
+        for q in range(2):
+            assert (donor.per_queue[q].latency_us.count
+                    == snap.per_queue[q].latency_us.count)
+
+
+@given(sides=st.lists(st.tuples(counter, counter, counter, counter,
+                                value_lists),
+                      min_size=2, max_size=6))
+@settings(max_examples=30, deadline=None)
+def test_run_stats_merge_all_counters_match_sequential_fold(sides):
+    runs_a = [_run_stats(o, d, i_, a, lat, seed=k)
+              for k, (o, d, i_, a, lat) in enumerate(sides)]
+    runs_b = [_run_stats(o, d, i_, a, lat, seed=k)
+              for k, (o, d, i_, a, lat) in enumerate(sides)]
+    nway = runs_a[0].merge_all(runs_a[1:])
+    seq = runs_b[0]
+    for r in runs_b[1:]:
+        seq.merge(r)
+    for f in ("offered", "dropped", "items", "awake_ns", "wakeups",
+              "cycles", "busy_tries"):
+        assert getattr(nway, f) == getattr(seq, f), f
+    assert nway.latency_us.count == seq.latency_us.count
+
+
+def test_run_stats_merge_all_empty_iterable_is_noop():
+    rs = _run_stats(10, 1, 5, 100, [1.0, 2.0])
+    before = (rs.offered, rs.items, rs.latency_us.count)
+    rs.merge_all([])
+    assert (rs.offered, rs.items, rs.latency_us.count) == before
