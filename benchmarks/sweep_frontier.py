@@ -20,7 +20,10 @@ Rows (suite convention: ``name,value,derived``):
     latency band), plus busy-poll's corner (CPU=1);
   - ``table/<rho>``         the calibrated operating point per load;
   - ``verdict/...``         the calibrated-vs-fixed comparison above;
-  - ``sweep/…``             sweep size and wall time (one jit call).
+  - ``sweep/…``             sweep size and wall time (one jit call),
+    split into first-call (``wall_s`` = trace + compile + execute) and
+    second-call (``execute_s``, a compile-cache hit) timings, with
+    ``compile_s`` their difference and throughput on the execute time.
 
 CLI: ``python -m benchmarks.sweep_frontier [--smoke] [--interference]``
 — ``--smoke`` runs a tiny grid and exits nonzero on a failed verdict
@@ -79,9 +82,12 @@ def _sweep(quick: bool, noisy: bool = False):
                              rate_mpps=rhos * MU_MPPS, seeds=seeds)
     t0 = time.time()
     bs = simulate_batch(grid, cfg, slot_us=slot_us)
-    wall = time.time() - t0
-    return (cfg, grid, bs, wall, t_s_grid, t_l_grid, m_grid, rhos, seeds,
-            slot_us)
+    wall = time.time() - t0          # trace + compile + execute
+    t1 = time.time()
+    simulate_batch(grid, cfg, slot_us=slot_us)
+    execute = time.time() - t1       # compile-cache hit: execute only
+    return (cfg, grid, bs, wall, execute, t_s_grid, t_l_grid, m_grid,
+            rhos, seeds, slot_us)
 
 
 def sweep_frontier(quick: bool = False, noisy: bool = False) -> ROWS:
@@ -90,8 +96,8 @@ def sweep_frontier(quick: bool = False, noisy: bool = False) -> ROWS:
 
     target = NOISY_TARGET_MEAN_LAT_US if noisy else TARGET_MEAN_LAT_US
     max_loss = NOISY_MAX_LOSS if noisy else MAX_LOSS
-    (cfg, grid, bs, wall, t_s_grid, t_l_grid, m_grid, rhos, seeds,
-     slot_us) = _sweep(quick, noisy)
+    (cfg, grid, bs, wall, execute, t_s_grid, t_l_grid, m_grid, rhos,
+     seeds, slot_us) = _sweep(quick, noisy)
 
     # seed-averaged (ts, tl, m, rho) lattice
     lat = bs.reshaped("mean_latency_us").mean(axis=-1)[:, :, :, 0, :]
@@ -109,9 +115,11 @@ def sweep_frontier(quick: bool = False, noisy: bool = False) -> ROWS:
 
     rows: ROWS = [(
         "sweep/points", float(len(grid)),
-        f"one_jit_call=True;wall_s={wall:.2f};slots_per_point="
+        f"one_jit_call=True;wall_s={wall:.2f};"
+        f"compile_s={max(wall - execute, 0.0):.2f};"
+        f"execute_s={execute:.2f};slots_per_point="
         f"{int(cfg.duration_us / slot_us)};"
-        f"pts_per_s={len(grid) / max(wall, 1e-9):.0f};"
+        f"pts_per_s={len(grid) / max(execute, 1e-9):.0f};"
         f"interference={cfg.is_noisy}")]
 
     # per-load Pareto frontier: min CPU within sliding latency bands

@@ -17,9 +17,11 @@ PR 3/4 kept them in sync with a hand-maintained drift guard
     code says otherwise).
 
 File discovery is structural, not hard-wired: any scanned file defining
-``class SimRunConfig`` is paired with a sibling ``batched.py`` in the
-same directory, so fixture mini-repos exercise the pass the same way
-``src/repro/runtime`` does.
+``class SimRunConfig`` is paired with every sibling engine module
+(``batched.py`` and, when present, the event-jump kernel
+``batched_adaptive.py``) in the same directory, so fixture mini-repos
+exercise the pass the same way ``src/repro/runtime`` does — each engine
+file must independently read-or-declare every config field.
 """
 
 from __future__ import annotations
@@ -31,7 +33,7 @@ from .core import ERROR, AnalysisPass, Finding, SourceFile, register
 __all__ = ["EngineParityPass"]
 
 CONFIG_CLASS = "SimRunConfig"
-ENGINE_BASENAME = "batched.py"
+ENGINE_BASENAMES = ("batched.py", "batched_adaptive.py")
 # attribute bases that denote "the config object" in the engine module
 CONFIG_BASES = ("cfg", "config")
 
@@ -114,12 +116,10 @@ class EngineParityPass(AnalysisPass):
             fields = _config_fields(sf)
             if fields is None:
                 continue
-            engine = next(
-                (e for e in by_dir.get(sf.path.parent, [])
-                 if e.path.name == ENGINE_BASENAME), None)
-            if engine is None:
-                continue
-            findings.extend(self._check_pair(sf, engine, fields))
+            engines = [e for e in by_dir.get(sf.path.parent, [])
+                       if e.path.name in ENGINE_BASENAMES]
+            for engine in engines:
+                findings.extend(self._check_pair(sf, engine, fields))
         return findings
 
     def _check_pair(self, config_sf: SourceFile, engine_sf: SourceFile,

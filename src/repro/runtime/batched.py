@@ -91,6 +91,27 @@ stall windows leave finite-sample noise in both engines' means — to
 mean sojourn within max(4.5us, 22%), CPU within 0.025 + 6%, and loss
 fraction within 0.03 absolute — pinned for 16 random noisy-host
 configurations in the same test module.
+
+Stepping modes.  ``simulate_batch(..., stepping="fixed")`` (the
+default) is the kernel described above; every quantization caveat in
+this docstring is a statement about its *per-slot* update at
+``slot_us`` resolution, with two scan-shape refinements:
+
+  - the scan length is the slot count rounded *up* a geometric ladder
+    (``bucket_steps``) and the run duration is a traced input, so
+    nearby durations share one compiled kernel (slots past a point's
+    duration are carry-preserving no-ops) — numerics are unchanged,
+    only recompile churn is;
+  - wake-timer / busy-period / stall-window quantization is always
+    ``slot_us`` regardless of the padded scan length.
+
+``stepping="adaptive"`` dispatches to the event-jump kernel in
+``batched_adaptive.py``: variable ``dt`` per scan step (next wake /
+drain-out / fill / schedule-segment / window / stall-start boundary),
+closed-form multi-slot aggregates, scan length O(#events) instead of
+O(duration/slot_us) — load-proportional simulation, ~10x+ fewer steps
+at low load.  Its approximation surface (what stays exact, what moves)
+is documented in that module; both modes hold the parity bands above.
 """
 
 from __future__ import annotations
@@ -109,7 +130,7 @@ import jax.numpy as jnp
 from .simcore import SimRunConfig
 from .stats import Reservoir, RunStats, WindowedSeries
 
-__all__ = ["SweepGrid", "BatchStats", "simulate_batch",
+__all__ = ["SweepGrid", "BatchStats", "simulate_batch", "bucket_steps",
            "unsupported_config_fields", "validate_batched_config",
            "CompileCache", "compile_cache_stats"]
 
@@ -189,6 +210,26 @@ def compile_cache_stats() -> list[dict]:
     registration order.  Benchmarks surface these in their JSON rows so
     retrace behavior is part of the tracked perf trajectory."""
     return [c.stats() for c in CompileCache._registry]
+
+
+def bucket_steps(n: int, *, base: int = 64, ratio: float = 1.25) -> int:
+    """Round a scan length up to a small geometric ladder.
+
+    Both engines key their ``CompileCache`` on the scan length; keying
+    on the *exact* slot count means every distinct ``duration_us``
+    recompiles (a multi-second retrace to save a padded no-op tail).
+    Rounding up to ``base * ratio**k`` collapses all nearby durations
+    onto one compiled kernel at the cost of at most ``ratio - 1``
+    (25%) extra carry-preserving no-op steps — the run's true duration
+    is a traced input, so results are unchanged."""
+    n = max(int(n), 1)
+    v = base
+    # rungs are the iterates v -> ceil(v * ratio), which makes every
+    # rung a fixed point: bucket_steps(bucket_steps(n)) == bucket_steps(n)
+    while v < n:
+        v = int(math.ceil(v * ratio))
+    return v
+
 
 _DIMS = ("t_s_us", "t_l_us", "m", "n_queues", "rate_mpps", "seed")
 
@@ -318,6 +359,16 @@ class BatchStats:
     # (len(grid), n_windows, 4) — [offered, served, lat_area, awake] —
     # the same raw sums the event engine's WindowAccum keeps
     win: np.ndarray = field(default_factory=lambda: np.empty(0))
+    # stepping diagnostics: which kernel produced this batch, its
+    # compiled scan length, and per-point live-step / forced-step
+    # counts, exact simulated time, and end-of-run total backlog (the
+    # missing term of the offered = served + dropped + backlog law)
+    stepping: str = "fixed"
+    scan_len: int = 0
+    n_steps: np.ndarray = field(default_factory=lambda: np.empty(0))
+    forced_steps: np.ndarray = field(default_factory=lambda: np.empty(0))
+    sim_time_us: np.ndarray = field(default_factory=lambda: np.empty(0))
+    final_backlog: np.ndarray = field(default_factory=lambda: np.empty(0))
 
     # -- derived ---------------------------------------------------------------
     @property
@@ -451,7 +502,7 @@ def _build_sweep(n_slots: int, slot_us: float, m_max: int, q_max: int,
     t_idx = jnp.arange(m_max)
     q_idx = jnp.arange(q_max)
 
-    def one_point(t_s, t_l, m, nq, lam, seed_lo, seed_hi,
+    def one_point(t_s, t_l, m, nq, lam, seed_lo, seed_hi, duration,
                   sched_edges, sched_scales):
         tmask = t_idx < m
         qmask = q_idx < nq
@@ -468,9 +519,14 @@ def _build_sweep(n_slots: int, slot_us: float, m_max: int, q_max: int,
         sleep0 = jnp.where(tmask, jnp.maximum(sleep0, dt), jnp.inf)
 
         def step(carry, t):
+            prev = carry
             (sleep_rem, attached, backlog, vac_timer, arr_res, stall_end,
              S, win_acc) = carry
             now = t.astype(jnp.float32) * dt
+            # slots at/past the traced duration are carry-preserving
+            # no-ops: the scan length is bucketed (bucket_steps), so one
+            # compiled kernel serves every nearby duration
+            live = now < duration
             kt_step = jax.random.fold_in(key, t)
             if tail_prob > 0.0:
                 kt_step, kp, ku = jax.random.split(kt_step, 3)
@@ -614,8 +670,11 @@ def _build_sweep(n_slots: int, slot_us: float, m_max: int, q_max: int,
                 win_acc = win_acc.at[w].add(jnp.stack([
                     offered, served, lat_area,
                     n_wake * wake_cost_us + served / mu]))
-            return (sleep_rem, attached, backlog, vac_timer, arr_res,
-                    stall_end, S, win_acc), None
+            nxt = (sleep_rem, attached, backlog, vac_timer, arr_res,
+                   stall_end, S, win_acc)
+            gated = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(live, new, old), nxt, prev)
+            return gated, None
 
         z0 = jnp.float32(0.0)
         init = (sleep0,
@@ -626,9 +685,9 @@ def _build_sweep(n_slots: int, slot_us: float, m_max: int, q_max: int,
                 jnp.float32(-1.0),          # stall_end: no window open
                 _SlotStats(z0, z0, z0, z0, z0, z0, z0, z0, z0, z0),
                 jnp.zeros((max(n_windows, 1), 4), jnp.float32))
-        (_, _, _, _, _, _, S, win_acc), _ = jax.lax.scan(
+        (_, _, backlog_f, _, _, _, S, win_acc), _ = jax.lax.scan(
             step, init, jnp.arange(n_slots, dtype=jnp.int32))
-        return S, win_acc
+        return S, win_acc, backlog_f.sum()
 
     return jax.jit(jax.vmap(one_point))
 
@@ -701,7 +760,8 @@ def _schedule_rows(grid: SweepGrid, cfg: SimRunConfig
 
 
 def simulate_batch(grid: SweepGrid, cfg: SimRunConfig | None = None, *,
-                   slot_us: float = 0.5) -> BatchStats:
+                   slot_us: float = 0.5,
+                   stepping: str = "fixed") -> BatchStats:
     """Simulate every operating point in ``grid`` — one JIT-compiled,
     vmapped call over the whole batch.
 
@@ -712,12 +772,38 @@ def simulate_batch(grid: SweepGrid, cfg: SimRunConfig | None = None, *,
     override the config's.  ``cfg.window_us > 0`` turns on the windowed
     adaptation series (``BatchStats.windows(i)``).  Binned time series
     remain event-engine-only and raise (``validate_batched_config``).
+
+    ``stepping`` selects the kernel: ``"fixed"`` (default) scans
+    uniform ``slot_us`` slots; ``"adaptive"`` scans event-jump
+    macro-slots (see ``batched_adaptive``) — same statistics, same
+    parity bands, scan length proportional to event count instead of
+    simulated time.
     """
     cfg = cfg or SimRunConfig()
     validate_batched_config(cfg)
-    n_slots = max(int(math.ceil(cfg.duration_us / slot_us)), 1)
+    if stepping not in ("fixed", "adaptive"):
+        raise ValueError(
+            f"stepping must be 'fixed' or 'adaptive', got {stepping!r}")
+    n = len(grid)
     n_windows = (int(math.ceil(cfg.duration_us / cfg.window_us))
                  if cfg.window_us > 0 else 0)
+    if stepping == "adaptive":
+        from .batched_adaptive import adaptive_sweep_arrays
+        vals, win_np, back_f, simt, scan_len = adaptive_sweep_arrays(
+            grid, cfg, float(slot_us))
+        return BatchStats(
+            grid=grid, cfg=cfg, slot_us=float(slot_us),
+            offered=vals["offered"], dropped=vals["dropped"],
+            serviced=vals["serviced"], wakeups=vals["wakeups"],
+            busy_tries=vals["busy_tries"], cycles=vals["cycles"],
+            awake_us=vals["awake_us"], lat_area=vals["lat_area"],
+            vac_sum=vals["vac_sum"], nv_sum=vals["nv_sum"],
+            win=win_np, stepping="adaptive", scan_len=int(scan_len),
+            n_steps=vals["n_steps"], forced_steps=vals["forced_steps"],
+            sim_time_us=simt, final_backlog=back_f)
+    n_slots_true = max(int(math.ceil(cfg.duration_us / slot_us)), 1)
+    n_slots = bucket_steps(n_slots_true)
+    n_win_pad = bucket_steps(n_windows, base=8) if n_windows else 0
     m_max = int(grid.m.max())
     q_max = int(grid.n_queues.max())
     n_seg, sched_edges, sched_scales = _schedule_rows(grid, cfg)
@@ -730,9 +816,9 @@ def simulate_batch(grid: SweepGrid, cfg: SimRunConfig | None = None, *,
          float(sm.tail_prob), float(sm.tail_mean_us)),
         (float(cfg.interference_prob), float(cfg.interference_mean_us),
          float(cfg.stall_rate_per_us), float(cfg.stall_mean_us)),
-        n_seg, n_windows, float(cfg.window_us))
+        n_seg, n_win_pad, float(cfg.window_us))
     seed64 = np.asarray(grid.seed, dtype=np.uint64)
-    out, win = fn(
+    out, win, back_f = fn(
         jnp.asarray(grid.t_s_us, jnp.float32),
         jnp.asarray(grid.t_l_us, jnp.float32),
         jnp.asarray(grid.m, jnp.int32),
@@ -740,6 +826,7 @@ def simulate_batch(grid: SweepGrid, cfg: SimRunConfig | None = None, *,
         jnp.asarray(grid.rate_mpps, jnp.float32),
         jnp.asarray((seed64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)),
         jnp.asarray((seed64 >> np.uint64(32)).astype(np.uint32)),
+        jnp.full((n,), float(cfg.duration_us), jnp.float32),
         jnp.asarray(sched_edges, jnp.float32),
         jnp.asarray(sched_scales, jnp.float32))
     vals = {k: np.asarray(v, dtype=np.float64)
@@ -750,5 +837,11 @@ def simulate_batch(grid: SweepGrid, cfg: SimRunConfig | None = None, *,
                       busy_tries=vals["busy_tries"], cycles=vals["cycles"],
                       awake_us=vals["awake_us"], lat_area=vals["lat_area"],
                       vac_sum=vals["vac_sum"], nv_sum=vals["nv_sum"],
-                      win=(np.asarray(win, dtype=np.float64) if n_windows
-                           else np.empty(0)))
+                      win=(np.asarray(win, dtype=np.float64)[:, :n_windows]
+                           if n_windows else np.empty(0)),
+                      stepping="fixed", scan_len=n_slots,
+                      n_steps=np.full(n, float(n_slots_true)),
+                      forced_steps=np.zeros(n),
+                      # fixed slots overshoot duration by the ceil slot
+                      sim_time_us=np.full(n, n_slots_true * slot_us),
+                      final_backlog=np.asarray(back_f, dtype=np.float64))

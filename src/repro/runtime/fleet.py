@@ -75,7 +75,14 @@ from .batched import (
     CompileCache,
     SweepGrid,
     _schedule_rows,
+    bucket_steps,
     validate_batched_config,
+)
+from .batched_adaptive import (
+    _FILL_SLACK_PKTS,
+    _RATE_EPS,
+    _WAKE_EPS_US,
+    estimate_adaptive_steps,
 )
 from .simcore import _LINK_UTIL_CLAMP, FleetConfig, SimRunConfig
 from .stats import Reservoir, RunStats, hedged_latency_quantile
@@ -180,7 +187,7 @@ def _build_fleet_sweep(n_slots: int, slot_us: float, m_max: int,
                        lb_softness_pkts: float, stale_every_slots: int,
                        far_count: int, near_cost_us: float,
                        far_cost_us: float, link_rate_mpps: float,
-                       n_shards: int):
+                       n_shards: int, stepping: str = "fixed"):
     """Build + jit the (point x host) fleet kernel for one static shape.
 
     The per-host slot body is the single-host kernel's, line for line
@@ -189,6 +196,21 @@ def _build_fleet_sweep(n_slots: int, slot_us: float, m_max: int,
     and the hedge-duplicate exchange are the only cross-host stages.
     ``n_shards > 1`` wraps the point-axis vmap in ``shard_map`` over the
     first ``n_shards`` local devices.
+
+    ``stepping="fixed"`` scans ``n_slots`` constant ``slot_us`` slots
+    (``duration`` is traced and steps past it are carry-held no-ops, so
+    one bucketed scan length serves nearby durations bit-identically);
+    ``stepping="adaptive"`` treats ``n_slots`` as the event-jump step
+    *budget*: every scan step advances one shared variable ``dt`` per
+    point — the min over all hosts' wake / drain-out / fill boundaries,
+    the schedule segment end, each host's next correlated-stall start,
+    and the LB stale-snapshot refresh lattice (the refresh is a jump
+    boundary, so the stale signal updates exactly on its
+    ``lb_stale_us`` grid) — and the per-host body applies the
+    closed-form multi-slot aggregates of ``batched_adaptive``.  The
+    cross-host stages (LB split, bottleneck-link M/M/1 wait at the
+    macro-slot's admission rate, fluid hedge duplication) consume the
+    same ``dt``.
     """
     base_us, slope, sigma_us, tail_prob, tail_mean_us = sleep_params
     intf_prob, intf_mean_us, stall_rate, stall_mean_us = interference_params
@@ -205,7 +227,7 @@ def _build_fleet_sweep(n_slots: int, slot_us: float, m_max: int,
                 else jnp.full((n_hosts,), 1.0 / n_hosts, jnp.float32))
 
     def one_fleet(t_s, t_l, m, nq, lam, seed_lo, seed_hi, hedge_d,
-                  sched_edges, sched_scales):
+                  duration, sched_edges, sched_scales):
         tmask = t_idx < m
         qmask = q_idx < nq
 
@@ -218,9 +240,16 @@ def _build_fleet_sweep(n_slots: int, slot_us: float, m_max: int,
                 jax.random.fold_in(jax.random.PRNGKey(0), lo), seed_hi)
             k, k0 = jax.random.split(k)
             s0 = jax.random.uniform(k0, (m_max,)) * t_s
-            return k, s0
+            # the extra split exists only in adaptive builds, so the
+            # fixed kernel's per-host streams stay bit-identical
+            if stepping == "adaptive" and stall_rate > 0.0:
+                k, kst = jax.random.split(k)
+                ns0 = jax.random.exponential(kst, ()) / stall_rate
+            else:
+                ns0 = jnp.float32(jnp.inf)
+            return k, s0, ns0
 
-        keys, sleep0_h = jax.vmap(init_host)(host_lo)
+        keys, sleep0_h, next0_h = jax.vmap(init_host)(host_lo)
         sleep0_h = jnp.where(tmask[None, :],
                              jnp.maximum(sleep0_h, dt), jnp.inf)
 
@@ -333,9 +362,11 @@ def _build_fleet_sweep(n_slots: int, slot_us: float, m_max: int,
                     stall_end), out
 
         def fleet_step(carry, t):
+            prev = carry
             (f_sleep, f_att, f_back, f_vac, f_res, f_stall, stale_b,
              S) = carry
             now = t.astype(jnp.float32) * dt
+            live = now < duration
             if n_seg > 0:
                 si = jnp.clip(
                     jnp.searchsorted(sched_edges, now, side="right") - 1,
@@ -412,22 +443,328 @@ def _build_fleet_sweep(n_slots: int, slot_us: float, m_max: int,
                 topo_area=S.topo_area + topo_area_h,
                 hedge_dup=S.hedge_dup + dup_h,
             )
-            return (f_sleep, f_att, f_back, f_vac, f_res, f_stall,
-                    stale_b, S), None
+            nxt = (f_sleep, f_att, f_back, f_vac, f_res, f_stall,
+                   stale_b, S)
+            # steps past this point's duration hold the carry — the
+            # bucketed scan length pads with no-ops, live steps stay
+            # bit-identical to the unpadded scan
+            gated = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(live, new, old), nxt, prev)
+            return gated, None
 
         zh = jnp.zeros((n_hosts,), jnp.float32)
-        init = (sleep0_h,
-                jnp.full((n_hosts, m_max), -1, jnp.int32),
-                jnp.zeros((n_hosts, q_max), jnp.float32),
-                jnp.zeros((n_hosts, q_max), jnp.float32),
-                jnp.zeros((n_hosts, q_max), jnp.float32),
-                jnp.full((n_hosts,), -1.0, jnp.float32),
-                zh,                          # stale LB snapshot
-                _FleetSlotStats(zh, zh, zh, zh, zh, zh, zh, zh, zh, zh,
-                                zh, zh))
-        (*_, S), _ = jax.lax.scan(
-            fleet_step, init, jnp.arange(n_slots, dtype=jnp.int32))
-        return S
+        if stepping == "fixed":
+            init = (sleep0_h,
+                    jnp.full((n_hosts, m_max), -1, jnp.int32),
+                    jnp.zeros((n_hosts, q_max), jnp.float32),
+                    jnp.zeros((n_hosts, q_max), jnp.float32),
+                    jnp.zeros((n_hosts, q_max), jnp.float32),
+                    jnp.full((n_hosts,), -1.0, jnp.float32),
+                    zh,                          # stale LB snapshot
+                    _FleetSlotStats(zh, zh, zh, zh, zh, zh, zh, zh, zh,
+                                    zh, zh, zh))
+            (*_, S), _ = jax.lax.scan(
+                fleet_step, init, jnp.arange(n_slots, dtype=jnp.int32))
+            n_live = jnp.minimum(jnp.ceil(duration / dt),
+                                 jnp.float32(n_slots))
+            return S, n_live * dt, n_live, jnp.zeros_like(duration)
+
+        # ---- adaptive (event-jump): one shared variable dt per point —
+        # the per-host boundary structure reduced with a fleet-wide min,
+        # so all hosts advance in lock-step through the LB coupling
+        floor_us = slot_us
+        stale_us = float(stale_every_slots) * slot_us
+
+        def fleet_step_a(carry, t):
+            prev = carry
+            (a_sleep, a_att, a_back, a_vac, a_res, a_stall, a_next,
+             lb_snap, next_ref, rem_t, nst, fst, SA) = carry
+            now = duration - rem_t
+            live = rem_t > 0.0
+
+            if n_seg > 0:
+                si = jnp.clip(
+                    jnp.searchsorted(sched_edges, now, side="right") - 1,
+                    0, n_seg - 1)
+                scale_t = sched_scales[si]
+                nxt_si = jnp.clip(si + 1, 0, n_seg - 1)
+                seg_dt = jnp.where(si + 1 < n_seg,
+                                   sched_edges[nxt_si] - now, jnp.inf)
+            else:
+                scale_t = jnp.float32(1.0)
+                seg_dt = jnp.float32(jnp.inf)
+
+            # LB stale refresh is a jump boundary: the snapshot updates
+            # exactly on its lb_stale_us lattice (missed lattice points
+            # after a forced jump are skipped, matching the fixed
+            # kernel's modulo refresh)
+            if lb_code == 2:
+                fire_ref = now + _WAKE_EPS_US >= next_ref
+                lb_snap = jnp.where(fire_ref, a_back.sum(axis=1), lb_snap)
+                next_ref = jnp.where(
+                    fire_ref,
+                    (jnp.floor(now / stale_us + _WAKE_EPS_US) + 1.0)
+                    * stale_us,
+                    next_ref)
+                shares = jax.nn.softmax(-lb_snap / lb_softness_pkts)
+                ref_dt = next_ref - now
+            else:
+                shares = w_static
+                ref_dt = jnp.float32(jnp.inf)
+            lam_h = lam * shares                       # (H,) mpps
+            lam_hq = (lam_h * scale_t)[:, None] \
+                * jnp.where(qmask, 1.0 / nq, 0.0)[None, :]
+
+            # ---- the jump: nearest boundary across the whole fleet
+            sleeping_h = tmask[None, :] & (a_att < 0)
+            occ_h = (jax.nn.one_hot(a_att, q_max).sum(axis=1) > 0)
+            wake_dt = jnp.min(jnp.where(
+                sleeping_h, jnp.maximum(a_sleep, 0.0), jnp.inf))
+            net_out = jnp.where(occ_h, mu - lam_hq, 0.0)
+            drain_hq = jnp.where(
+                occ_h & (net_out > _RATE_EPS),
+                jnp.maximum(a_back, 0.0)
+                / jnp.maximum(net_out, _RATE_EPS), jnp.inf)
+            drain_dt = jnp.min(drain_hq)
+            net_in = lam_hq - jnp.where(occ_h, mu, 0.0)
+            fill_dt = jnp.min(jnp.where(
+                qmask[None, :] & (net_in > _RATE_EPS)
+                & (a_back < capacity - _FILL_SLACK_PKTS),
+                (capacity - a_back) / jnp.maximum(net_in, _RATE_EPS),
+                jnp.inf))
+            stall_dt = jnp.min(a_next) - now
+            dt_b = jnp.minimum(
+                jnp.minimum(jnp.minimum(wake_dt, drain_dt),
+                            jnp.minimum(fill_dt, seg_dt)),
+                jnp.minimum(jnp.minimum(ref_dt, stall_dt), rem_t))
+            # completion guard — tail-reserve pacing only, see
+            # batched_adaptive (same scheme, n_slots is the budget here)
+            steps_left = jnp.float32(n_slots) - t.astype(jnp.float32)
+            in_tail = steps_left <= jnp.float32(max(n_slots // 8, 2))
+            pace = jnp.where(in_tail, rem_t / steps_left, 0.0)
+            # floor respects wakes and drain-outs fleet-wide (see
+            # batched_adaptive: stepping past either stretches busy
+            # periods / coalesces claims and biases the wake rate down
+            # through the T_L parking feedback)
+            floor_eff = jnp.minimum(
+                floor_us,
+                jnp.maximum(jnp.minimum(wake_dt, drain_dt),
+                            _WAKE_EPS_US))
+            dtv = jnp.minimum(
+                jnp.maximum(dt_b, jnp.maximum(floor_eff, pace)), rem_t)
+            forced = (dtv > jnp.maximum(dt_b, floor_us) + _WAKE_EPS_US) \
+                & live
+            t_new = now + dtv
+
+            def host_step_a(key_h, lam_q, sleep_rem, attached, backlog,
+                            vac_timer, arr_res, stall_end, next_stall):
+                """One host, one macro-slot — the closed-form aggregates
+                of ``batched_adaptive`` at the shared fleet ``dtv``."""
+                kt_step = jax.random.fold_in(key_h, t)
+                if tail_prob > 0.0:
+                    kt_step, kp, ku = jax.random.split(kt_step, 3)
+                if intf_prob > 0.0:
+                    kt_step, kip, kie = jax.random.split(kt_step, 3)
+                if stall_rate > 0.0:
+                    kt_step, kse, ksg, ksu = jax.random.split(kt_step, 4)
+                zs = jax.random.normal(kt_step, (q_max + m_max,))
+
+                sleeping = tmask & (attached < 0)
+                occ = (jax.nn.one_hot(attached, q_max).sum(axis=0) > 0)
+
+                # drain-boundary steps are deterministic per queue: a
+                # noisy draw there is one-sided (positive residual
+                # extends the busy period, negative cannot shorten it)
+                # — see batched_adaptive for the full argument
+                net_out_l = jnp.where(occ, mu - lam_q, 0.0)
+                drain_ql = jnp.where(
+                    occ & (net_out_l > _RATE_EPS),
+                    jnp.maximum(backlog, 0.0)
+                    / jnp.maximum(net_out_l, _RATE_EPS), jnp.inf)
+                drain_now = occ & (drain_ql <= dtv + _WAKE_EPS_US)
+                mu_a = lam_q * dtv
+                z_q = jnp.where(drain_now, 0.0, zs[:q_max])
+                raw = arr_res + mu_a + jnp.sqrt(mu_a) * z_q
+                a = jnp.maximum(raw, 0.0)
+                arr_res = jnp.minimum(raw, 0.0)
+                room = jnp.maximum(capacity - backlog, 0.0) \
+                    + jnp.where(occ, mu * dtv, 0.0)
+                adm = jnp.minimum(a, room)
+                offered = a.sum()
+                dropped = (a - adm).sum()
+
+                serve = jnp.where(
+                    occ, jnp.minimum(backlog + adm, mu * dtv), 0.0)
+                b_new = jnp.minimum(
+                    jnp.maximum(backlog + adm - serve, 0.0), capacity)
+                served = serve.sum()
+
+                lat_area = 0.5 * (backlog.sum() + b_new.sum()) * dtv
+                vac_timer = vac_timer + jnp.where(qmask & ~occ, dtv, 0.0)
+                backlog = b_new
+
+                if stall_rate > 0.0:
+                    fire = (next_stall <= t_new) & live
+                    w_end = next_stall + stall_mean_us \
+                        * jax.random.exponential(kse, ())
+                    stall_end = jnp.where(
+                        fire, jnp.maximum(stall_end, w_end), stall_end)
+                    gap = jax.random.exponential(ksg, ()) / stall_rate
+                    next_stall = jnp.where(fire, next_stall + gap,
+                                           next_stall)
+
+                over = jnp.full((m_max,), base_us)
+                if sigma_us > 0.0:
+                    over = over + sigma_us * jnp.abs(zs[q_max:])
+                if tail_prob > 0.0:
+                    hit = jax.random.uniform(kp, (m_max,)) < tail_prob
+                    over = over + hit * tail_mean_us \
+                        * jax.random.exponential(ku, (m_max,))
+                if intf_prob > 0.0:
+                    ihit = jax.random.uniform(kip, (m_max,)) < intf_prob
+                    over = over + ihit * intf_mean_us \
+                        * jax.random.exponential(kie, (m_max,))
+                slp_s = t_s * (1.0 + slope) + over
+                slp_l = t_l * (1.0 + slope) + over
+
+                sleep_rem = jnp.where(sleeping, sleep_rem - dtv,
+                                      sleep_rem)
+                woken = sleeping & (sleep_rem <= _WAKE_EPS_US) & live
+                if stall_rate > 0.0:
+                    push = woken & (t_new < stall_end)
+                    woken = woken & ~push
+                    sleep_rem = jnp.where(
+                        push,
+                        stall_end - t_new
+                        + jax.random.uniform(ksu, (m_max,)),
+                        sleep_rem)
+                n_wake = woken.sum().astype(jnp.float32)
+
+                # queues drained out by the boundary release their
+                # thread BEFORE boundary wakes classify — drain-out
+                # precedes the boundary in true time, so a thread
+                # waking at the boundary must see the queue free
+                # (release-after-claim would park it on T_L)
+                q_done = occ & (backlog <= 1e-6)
+                att_q = jnp.clip(attached, 0, q_max - 1)
+                t_done = (attached >= 0) & q_done[att_q]
+                sleep_rem = jnp.where(t_done, slp_s, sleep_rem)
+                attached = jnp.where(t_done, -1, attached)
+                occ = occ & ~q_done
+
+                busy_tries = jnp.float32(0.0)
+                cycles = jnp.float32(0.0)
+                vac_sum = jnp.float32(0.0)
+                nv_sum = jnp.float32(0.0)
+                for i in range(m_max):      # static unroll, m_max small
+                    w = woken[i]
+                    free_q = qmask & ~occ
+                    claimable = free_q & (backlog >= 1.0)
+                    qi = jnp.argmax(jnp.where(claimable, backlog, -1.0))
+                    do_attach = w & claimable.any()
+                    empty_claim = w & ~claimable.any() & free_q.any()
+                    eqi = jnp.argmax(free_q)
+                    blocked = w & ~free_q.any()
+
+                    claim_hot = do_attach & (q_idx == qi)
+                    claim_any = claim_hot | (empty_claim & (q_idx == eqi))
+                    vac_sum = vac_sum + (vac_timer * claim_any).sum()
+                    nv_sum = nv_sum + jnp.where(do_attach, backlog[qi],
+                                                0.0)
+                    vac_timer = jnp.where(claim_any, 0.0, vac_timer)
+                    cycles = cycles + (do_attach | empty_claim)
+                    busy_tries = busy_tries + blocked
+                    attached = attached.at[i].set(
+                        jnp.where(do_attach, qi, attached[i]))
+                    occ = occ | claim_hot
+                    sleep_rem = sleep_rem.at[i].add(
+                        jnp.where(empty_claim, slp_s[i],
+                                  jnp.where(blocked, slp_l[i], 0.0)))
+
+                out = (offered, dropped, served, n_wake, busy_tries,
+                       cycles, vac_sum, nv_sum, adm.sum(), lat_area)
+                return (sleep_rem, attached, backlog, vac_timer, arr_res,
+                        stall_end, next_stall), out
+
+            new_carry, outs = jax.vmap(host_step_a)(
+                keys, lam_hq, a_sleep, a_att, a_back, a_vac, a_res,
+                a_stall, a_next)
+            (a_sleep, a_att, a_back, a_vac, a_res, a_stall,
+             a_next) = new_carry
+            (offered_h, dropped_h, served_h, n_wake_h, busy_h, cycles_h,
+             vac_h, nv_h, adm_h, lat_area_h) = outs
+            back_tot = a_back.sum(axis=1)
+
+            # topology — the macro-slot's admissions pay rack + link
+            # cost at the slot's average far-rack arrival rate
+            if topo_on:
+                topo_delay_us = rack_cost_us
+                if link_rate_mpps > 0.0 and far_count > 0:
+                    far_rate = jnp.where(far_mask, adm_h, 0.0).sum() / dtv
+                    gap = jnp.maximum(
+                        link_rate_mpps - far_rate,
+                        (1.0 - _LINK_UTIL_CLAMP) * link_rate_mpps)
+                    topo_delay_us = topo_delay_us + far_mask / gap
+                topo_area_h = adm_h * topo_delay_us
+            else:
+                topo_area_h = jnp.zeros((n_hosts,))
+
+            # hedging (fluid) — per macro-slot, same gate as fixed
+            hedge_on = (hedge_d > 0.0).astype(jnp.float32)
+            drain_us = back_tot / mu
+            gate = jax.nn.sigmoid((drain_us - hedge_d)
+                                  / (0.25 * hedge_d + 1e-6))
+            dup_h = adm_h * gate * hedge_on
+            b1 = jnp.argmin(back_tot)
+            b2 = jnp.argmin(jnp.where(h_idx == b1, jnp.inf, back_tot))
+            partner = jnp.where(h_idx == b1, b2, b1)
+            dup_per_q = dup_h[:, None] * (qmask / nq)
+            inject = jnp.zeros((n_hosts, q_max)).at[partner].add(
+                dup_per_q)
+            inj_room = jnp.maximum(capacity - a_back, 0.0)
+            a_back = a_back + jnp.minimum(inject, inj_room)
+
+            SA = _FleetSlotStats(
+                offered=SA.offered + offered_h,
+                dropped=SA.dropped + dropped_h,
+                serviced=SA.serviced + served_h,
+                wakeups=SA.wakeups + n_wake_h,
+                busy_tries=SA.busy_tries + busy_h,
+                cycles=SA.cycles + cycles_h,
+                awake_us=SA.awake_us + n_wake_h * wake_cost_us
+                         + served_h / mu,
+                lat_area=SA.lat_area + lat_area_h,
+                vac_sum=SA.vac_sum + vac_h,
+                nv_sum=SA.nv_sum + nv_h,
+                topo_area=SA.topo_area + topo_area_h,
+                hedge_dup=SA.hedge_dup + dup_h,
+            )
+            rem_t = rem_t - dtv
+            nst = nst + 1.0
+            fst = fst + forced.astype(jnp.float32)
+            nxt = (a_sleep, a_att, a_back, a_vac, a_res, a_stall, a_next,
+                   lb_snap, next_ref, rem_t, nst, fst, SA)
+            gated = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(live, new, old), nxt, prev)
+            return gated, None
+
+        z0 = jnp.float32(0.0)
+        init_a = (sleep0_h,
+                  jnp.full((n_hosts, m_max), -1, jnp.int32),
+                  jnp.zeros((n_hosts, q_max), jnp.float32),
+                  jnp.zeros((n_hosts, q_max), jnp.float32),
+                  jnp.zeros((n_hosts, q_max), jnp.float32),
+                  jnp.full((n_hosts,), -1.0, jnp.float32),
+                  next0_h,
+                  zh,                        # stale LB snapshot
+                  z0,                        # next_ref: refresh at t=0
+                  jnp.asarray(duration, jnp.float32),
+                  z0, z0,                    # n_steps, forced_steps
+                  _FleetSlotStats(zh, zh, zh, zh, zh, zh, zh, zh, zh,
+                                  zh, zh, zh))
+        (*_, rem_f, nst, fst, SA), _ = jax.lax.scan(
+            fleet_step_a, init_a, jnp.arange(n_slots, dtype=jnp.int32))
+        return SA, duration - rem_f, nst, fst
 
     inner = jax.vmap(one_fleet)
     if n_shards > 1:
@@ -437,7 +774,7 @@ def _build_fleet_sweep(n_slots: int, slot_us: float, m_max: int,
 
         mesh = Mesh(np.asarray(jax.devices()[:n_shards]), ("pts",))
         spec = PartitionSpec("pts")
-        inner = shard_map(inner, mesh=mesh, in_specs=(spec,) * 10,
+        inner = shard_map(inner, mesh=mesh, in_specs=(spec,) * 11,
                           out_specs=spec)
     return jax.jit(inner)
 
@@ -473,6 +810,14 @@ class FleetStats:
     nv_sum: np.ndarray = field(default_factory=lambda: np.empty(0))
     topo_area: np.ndarray = field(default_factory=lambda: np.empty(0))
     hedge_dup: np.ndarray = field(default_factory=lambda: np.empty(0))
+    # stepping diagnostics (see BatchStats): which kernel ran, its
+    # compiled scan length, and per-POINT live/forced step counts and
+    # exact simulated time (host axis shares one dt, so these are (P,))
+    stepping: str = "fixed"
+    scan_len: int = 0
+    n_steps: np.ndarray = field(default_factory=lambda: np.empty(0))
+    forced_steps: np.ndarray = field(default_factory=lambda: np.empty(0))
+    sim_time_us: np.ndarray = field(default_factory=lambda: np.empty(0))
 
     # -- derived ---------------------------------------------------------------
     @property
@@ -605,8 +950,8 @@ class FleetStats:
 
 
 def simulate_fleet(fgrid: FleetGrid, cfg: SimRunConfig | None = None, *,
-                   slot_us: float = 0.5,
-                   shard: bool | None = None) -> FleetStats:
+                   slot_us: float = 0.5, shard: bool | None = None,
+                   stepping: str = "fixed") -> FleetStats:
     """Simulate every fleet operating point — ONE jit-compiled call over
     the whole (point x host) batch; no Python loop over hosts.
 
@@ -615,15 +960,37 @@ def simulate_fleet(fgrid: FleetGrid, cfg: SimRunConfig | None = None, *,
     back to pure vmap on one device; ``True``/``False`` force the
     respective path.  Points are padded to a multiple of the device
     count and the padding is sliced off the results.
+
+    ``stepping="adaptive"`` switches to the event-jump kernel: hosts
+    advance in lock-step by a shared variable ``dt`` (nearest boundary
+    across the fleet, incl. the LB stale-refresh lattice).  The step
+    budget sums per-host boundary estimates — load-proportionality
+    shrinks as ``n_hosts`` grows (a 1000-host fleet has a wake
+    somewhere almost every slot), so the budget is clamped at the
+    fixed scan length and adaptive never scans more than fixed.
     """
+    if stepping not in ("fixed", "adaptive"):
+        raise ValueError(
+            f"stepping must be 'fixed' or 'adaptive', got {stepping!r}")
     cfg = cfg or SimRunConfig()
     validate_batched_config(cfg)
     fleet = fgrid.fleet.validate()
     n_pts = len(fgrid)
-    n_slots = max(int(math.ceil(cfg.duration_us / slot_us)), 1)
     m_max = int(fgrid.grid.m.max())
     q_max = int(fgrid.grid.n_queues.max())
     n_seg, sched_edges, sched_scales = _schedule_rows(fgrid.grid, cfg)
+    stale_every_slots = max(int(round(fleet.lb_stale_us / slot_us)), 1)
+
+    n_slots_true = max(int(math.ceil(cfg.duration_us / slot_us)), 1)
+    if stepping == "adaptive":
+        est = estimate_adaptive_steps(fgrid.grid, cfg, slot_us, 0)
+        if fleet.lb == "least-loaded":
+            est += int(math.ceil(
+                cfg.duration_us / (stale_every_slots * slot_us)))
+        n_slots = bucket_steps(
+            min(fleet.n_hosts * est + 64, n_slots_true))
+    else:
+        n_slots = bucket_steps(n_slots_true)
 
     n_dev = len(jax.devices())
     use_shard = (n_dev > 1) if shard is None else bool(shard)
@@ -632,7 +999,6 @@ def simulate_fleet(fgrid: FleetGrid, cfg: SimRunConfig | None = None, *,
     sm = cfg.sleep_model
     lb_weights = (tuple(float(w) for w in fleet.shares())
                   if fleet.lb == "weighted" else ())
-    stale_every_slots = max(int(round(fleet.lb_stale_us / slot_us)), 1)
     fn = _compiled_fleet_sweep(
         n_slots, float(slot_us), m_max, q_max, int(fleet.n_hosts),
         float(cfg.service_rate_mpps), float(cfg.queue_capacity),
@@ -645,7 +1011,7 @@ def simulate_fleet(fgrid: FleetGrid, cfg: SimRunConfig | None = None, *,
         float(fleet.lb_softness_pkts), stale_every_slots,
         fleet.far_hosts(), float(fleet.near_cost_us),
         float(fleet.far_cost_us), float(fleet.link_rate_mpps),
-        n_shards)
+        n_shards, stepping)
 
     pad = (-n_pts) % n_shards
     def row(a, dtype):
@@ -656,18 +1022,24 @@ def simulate_fleet(fgrid: FleetGrid, cfg: SimRunConfig | None = None, *,
 
     g = fgrid.grid
     seed64 = np.asarray(g.seed, dtype=np.uint64)
-    out = fn(row(g.t_s_us, jnp.float32), row(g.t_l_us, jnp.float32),
-             row(g.m, jnp.int32), row(g.n_queues, jnp.int32),
-             row(g.rate_mpps, jnp.float32),
-             row((seed64 & np.uint64(0xFFFFFFFF)).astype(np.uint32),
-                 jnp.uint32),
-             row((seed64 >> np.uint64(32)).astype(np.uint32), jnp.uint32),
-             row(fgrid.hedge_deadline_us, jnp.float32),
-             row(sched_edges, jnp.float32),
-             row(sched_scales, jnp.float32))
+    out, simt, nst, fst = fn(
+        row(g.t_s_us, jnp.float32), row(g.t_l_us, jnp.float32),
+        row(g.m, jnp.int32), row(g.n_queues, jnp.int32),
+        row(g.rate_mpps, jnp.float32),
+        row((seed64 & np.uint64(0xFFFFFFFF)).astype(np.uint32),
+            jnp.uint32),
+        row((seed64 >> np.uint64(32)).astype(np.uint32), jnp.uint32),
+        row(fgrid.hedge_deadline_us, jnp.float32),
+        row(np.full(n_pts, cfg.duration_us), jnp.float32),
+        row(sched_edges, jnp.float32),
+        row(sched_scales, jnp.float32))
     vals = {k: np.asarray(v, dtype=np.float64)[:n_pts]
             for k, v in out._asdict().items()}
     return FleetStats(
         fgrid=fgrid, cfg=cfg, slot_us=float(slot_us),
         backend=(f"shard_map({n_shards})" if n_shards > 1 else "vmap"),
+        stepping=stepping, scan_len=n_slots,
+        n_steps=np.asarray(nst, dtype=np.float64)[:n_pts],
+        forced_steps=np.asarray(fst, dtype=np.float64)[:n_pts],
+        sim_time_us=np.asarray(simt, dtype=np.float64)[:n_pts],
         **vals)

@@ -1,0 +1,10 @@
+"""Engine-parity fixture (bad side), adaptive engine: the adaptive
+sibling is checked independently, so ``window_us`` (unread, undeclared
+here too) is a second PARITY001, and the stale ``_JUMP_FIELDS`` entry
+naming a nonexistent config field is a third PARITY002."""
+
+_JUMP_FIELDS = ("no_such_knob_us",)
+
+
+def adaptive_sweep_arrays(cfg):
+    return cfg.duration_us * cfg.service_rate_mpps

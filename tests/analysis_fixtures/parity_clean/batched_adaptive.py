@@ -1,0 +1,9 @@
+"""Engine-parity fixture (clean side), adaptive engine: discovery pairs
+every ``ENGINE_BASENAMES`` sibling with the config class, and this one
+also reads-or-declares every field."""
+
+_EVENT_ENGINE_ONLY_FIELDS = ("timeseries_bin_us",)
+
+
+def adaptive_sweep_arrays(cfg):
+    return cfg.duration_us * cfg.service_rate_mpps

@@ -54,11 +54,15 @@ def _random_configs(n=24, seed=42):
 
 @pytest.mark.slow
 def test_parity_with_event_engine_24_random_configs():
-    """>= 20 randomly drawn static configs: batched mean sojourn and CPU
-    fraction agree with simulate_run within the documented tolerance."""
+    """>= 20 randomly drawn static configs: BOTH stepping modes' mean
+    sojourn and CPU fraction agree with simulate_run within the
+    documented tolerance (one event-engine truth run per config), and
+    adaptive agrees with fixed inside the same bands."""
     pts = _random_configs()
     cfg = SimRunConfig(duration_us=120_000.0, sleep_model=HR_SLEEP_MODEL)
-    bs = simulate_batch(SweepGrid.of_points(pts), cfg, slot_us=0.5)
+    grid = SweepGrid.of_points(pts)
+    bs = simulate_batch(grid, cfg, slot_us=0.5)
+    ba = simulate_batch(grid, cfg, slot_us=0.5, stepping="adaptive")
     for i, p in enumerate(pts):
         policy = MetronomePolicy(
             MetronomeConfig(m=p["m"], v_target_us=p["t_s_us"],
@@ -66,16 +70,26 @@ def test_parity_with_event_engine_24_random_configs():
                             ts_min_us=min(1.0, p["t_s_us"])),
             adaptive=False)
         rs = simulate_run(policy, PoissonWorkload(p["rate_mpps"]), cfg)
-        lat_b, lat_e = float(bs.mean_latency_us[i]), rs.mean_sojourn_us
-        cpu_b, cpu_e = float(bs.cpu_fraction[i]), rs.cpu_fraction
-        assert abs(lat_b - lat_e) <= max(LAT_ABS_US, LAT_REL * lat_e), \
-            (p, lat_b, lat_e)
-        assert abs(cpu_b - cpu_e) <= CPU_ABS + CPU_REL * cpu_e, \
-            (p, cpu_b, cpu_e)
-        # secondary accounting parity: wakeups within 15%, loss both ~0
-        assert bs.wakeups[i] == pytest.approx(rs.wakeups, rel=0.15)
-        assert float(bs.loss_fraction[i]) < 1e-3
+        for tag, b in (("fixed", bs), ("adaptive", ba)):
+            lat_b, lat_e = float(b.mean_latency_us[i]), rs.mean_sojourn_us
+            cpu_b, cpu_e = float(b.cpu_fraction[i]), rs.cpu_fraction
+            assert abs(lat_b - lat_e) <= max(LAT_ABS_US, LAT_REL * lat_e), \
+                (tag, p, lat_b, lat_e)
+            assert abs(cpu_b - cpu_e) <= CPU_ABS + CPU_REL * cpu_e, \
+                (tag, p, cpu_b, cpu_e)
+            # secondary accounting: wakeups within 15%, loss ~0
+            assert b.wakeups[i] == pytest.approx(rs.wakeups, rel=0.15)
+            assert float(b.loss_fraction[i]) < 1e-3
         assert rs.loss_fraction < 1e-3
+        # adaptive-vs-fixed inside the same band
+        lat_f, lat_a = float(bs.mean_latency_us[i]), \
+            float(ba.mean_latency_us[i])
+        assert abs(lat_a - lat_f) <= max(LAT_ABS_US, LAT_REL * lat_f), \
+            (p, lat_a, lat_f)
+        assert abs(float(ba.cpu_fraction[i]) - float(bs.cpu_fraction[i])) \
+            <= CPU_ABS + CPU_REL * float(bs.cpu_fraction[i]), p
+    # and the whole point of the adaptive kernel: far fewer live steps
+    assert float(ba.n_steps.mean()) < 0.35 * float(bs.n_steps.mean())
 
 
 @pytest.mark.slow
@@ -88,7 +102,9 @@ def test_parity_under_interference_16_random_configs():
     cfg = SimRunConfig(duration_us=120_000.0, sleep_model=HR_SLEEP_MODEL,
                        **INTERFERENCE_ENV)
     assert cfg.interference_prob > 0 and cfg.stall_rate_per_us > 0
-    bs = simulate_batch(SweepGrid.of_points(pts), cfg, slot_us=0.5)
+    grid = SweepGrid.of_points(pts)
+    bs = simulate_batch(grid, cfg, slot_us=0.5)
+    ba = simulate_batch(grid, cfg, slot_us=0.5, stepping="adaptive")
     for i, p in enumerate(pts):
         policy = MetronomePolicy(
             MetronomeConfig(m=p["m"], v_target_us=p["t_s_us"],
@@ -96,15 +112,27 @@ def test_parity_under_interference_16_random_configs():
                             ts_min_us=min(1.0, p["t_s_us"])),
             adaptive=False)
         rs = simulate_run(policy, PoissonWorkload(p["rate_mpps"]), cfg)
-        lat_b, lat_e = float(bs.mean_latency_us[i]), rs.mean_sojourn_us
-        cpu_b, cpu_e = float(bs.cpu_fraction[i]), rs.cpu_fraction
-        assert abs(lat_b - lat_e) <= max(ILAT_ABS_US, ILAT_REL * lat_e), \
-            (p, lat_b, lat_e)
-        assert abs(cpu_b - cpu_e) <= ICPU_ABS + ICPU_REL * cpu_e, \
-            (p, cpu_b, cpu_e)
-        assert abs(float(bs.loss_fraction[i]) - rs.loss_fraction) \
-            <= ILOSS_ABS, (p, float(bs.loss_fraction[i]), rs.loss_fraction)
-        assert bs.wakeups[i] == pytest.approx(rs.wakeups, rel=0.15)
+        for tag, b in (("fixed", bs), ("adaptive", ba)):
+            lat_b, lat_e = float(b.mean_latency_us[i]), rs.mean_sojourn_us
+            cpu_b, cpu_e = float(b.cpu_fraction[i]), rs.cpu_fraction
+            assert abs(lat_b - lat_e) <= max(ILAT_ABS_US,
+                                             ILAT_REL * lat_e), \
+                (tag, p, lat_b, lat_e)
+            assert abs(cpu_b - cpu_e) <= ICPU_ABS + ICPU_REL * cpu_e, \
+                (tag, p, cpu_b, cpu_e)
+            assert abs(float(b.loss_fraction[i]) - rs.loss_fraction) \
+                <= ILOSS_ABS, \
+                (tag, p, float(b.loss_fraction[i]), rs.loss_fraction)
+            assert b.wakeups[i] == pytest.approx(rs.wakeups, rel=0.15)
+        # adaptive-vs-fixed inside the same interference band
+        lat_f, lat_a = float(bs.mean_latency_us[i]), \
+            float(ba.mean_latency_us[i])
+        assert abs(lat_a - lat_f) <= max(ILAT_ABS_US, ILAT_REL * lat_f), \
+            (p, lat_a, lat_f)
+        assert abs(float(ba.cpu_fraction[i]) - float(bs.cpu_fraction[i])) \
+            <= ICPU_ABS + ICPU_REL * float(bs.cpu_fraction[i]), p
+        assert abs(float(ba.loss_fraction[i])
+                   - float(bs.loss_fraction[i])) <= ILOSS_ABS, p
 
 
 def test_interference_increases_latency_and_loss_vs_quiet_baseline():
