@@ -1,16 +1,20 @@
 """Project-specific static analysis: the repo's own invariants as a gate.
 
-Four AST-based passes over the codebase (``python -m repro.analysis``):
+Five AST-based passes over the codebase (``python -m repro.analysis``):
 
   - ``units``          — _us/_ns suffix discipline (UNITS001/002)
   - ``engine-parity``  — SimRunConfig fields vs the batched engine
                          (PARITY001/002)
   - ``scan-purity``    — lax.scan/jit/vmap body hygiene (SCAN001–004)
   - ``lock-discipline``— TryLock/threading.Lock rules (LOCK001–003)
+  - ``races``          — Eraser-style shared-state lockset analysis
+                         over thread entry points (RACE001–003)
 
 Stdlib-only (``ast`` + ``json``): importable and runnable without jax,
 so the CI gate costs seconds.  See ``repro.analysis.core`` for the
-framework and ``analysis_baseline.json`` for grandfathered findings.
+framework, ``repro.analysis.sanitizer`` for the dynamic counterpart
+that confirms or refutes RACE findings against real threaded runs, and
+``analysis_baseline.json`` for grandfathered findings.
 """
 
 from .core import (
@@ -26,6 +30,7 @@ from .core import (
 )
 from .locks import LockDisciplinePass
 from .parity import EngineParityPass
+from .races import RacePass
 from .scanpurity import ScanPurityPass
 from .units import UnitsPass
 
@@ -43,4 +48,5 @@ __all__ = [
     "EngineParityPass",
     "ScanPurityPass",
     "LockDisciplinePass",
+    "RacePass",
 ]

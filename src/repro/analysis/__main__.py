@@ -2,23 +2,37 @@
 
     python -m repro.analysis [--paths P ...] [--baseline FILE]
                              [--format text|json] [--update-baseline]
+                             [--since REV | --changed-only]
                              [--list-rules]
 
 Exit status: 0 when every finding is grandfathered by the baseline (or
 there are none), 1 when new findings exist, 2 on usage errors.  Default
-scope is ``src/repro``; the baseline default is
+scope is ``src/repro`` plus ``benchmarks``; the baseline default is
 ``analysis_baseline.json`` next to the repo root (located by walking up
 from this file), so the command works from any CWD.
+
+``--since REV`` restricts the scan to Python files changed since the
+given git revision (working tree included, untracked files too), and
+``--changed-only`` is shorthand for ``--since HEAD`` — both keep the
+pre-commit gate at seconds instead of a whole-tree pass.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import sys
 from pathlib import Path
 
 from .core import Baseline, registered_passes, run_analysis
+
+_EXIT_CODES = """\
+exit codes:
+  0   clean: no findings, or every finding grandfathered by the baseline
+  1   gate failure: at least one finding not covered by the baseline
+  2   usage error: missing path, unreadable baseline, bad git revision
+"""
 
 
 def _repo_root() -> Path:
@@ -30,16 +44,32 @@ def _repo_root() -> Path:
     return Path.cwd()
 
 
+def _changed_files(root: Path, since: str) -> list[Path]:
+    """Python files changed vs ``since``: committed-after, staged,
+    working-tree, and untracked.  Raises CalledProcessError on a bad
+    revision and FileNotFoundError when git is absent."""
+    diff = subprocess.run(
+        ["git", "diff", "--name-only", since, "--", "*.py"],
+        cwd=root, capture_output=True, text=True, check=True)
+    untracked = subprocess.run(
+        ["git", "ls-files", "-o", "--exclude-standard", "--", "*.py"],
+        cwd=root, capture_output=True, text=True, check=True)
+    names = set(diff.stdout.splitlines()) | set(untracked.stdout.splitlines())
+    return sorted(root / n for n in names if n)
+
+
 def main(argv: list[str] | None = None) -> int:
     root = _repo_root()
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="project-specific static analysis "
                     "(units / engine-parity / scan-purity / "
-                    "lock-discipline)")
+                    "lock-discipline / races)",
+        epilog=_EXIT_CODES,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--paths", nargs="*", default=None,
                     help="files or directories to scan "
-                         "(default: src/repro)")
+                         "(default: src/repro and benchmarks)")
     ap.add_argument("--baseline", default=str(root /
                                               "analysis_baseline.json"),
                     help="grandfathered-findings JSON (default: "
@@ -48,6 +78,14 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--update-baseline", action="store_true",
                     help="rewrite the baseline file to grandfather "
                          "every current finding, then exit 0")
+    scope = ap.add_mutually_exclusive_group()
+    scope.add_argument("--since", metavar="REV", default=None,
+                       help="scan only Python files changed since this "
+                            "git revision (working tree and untracked "
+                            "files included)")
+    scope.add_argument("--changed-only", action="store_true",
+                       help="shorthand for --since HEAD: scan only "
+                            "uncommitted/untracked Python files")
     ap.add_argument("--list-rules", action="store_true")
     args = ap.parse_args(argv)
 
@@ -58,12 +96,28 @@ def main(argv: list[str] | None = None) -> int:
                 print(f"  {rid}: {desc}")
         return 0
 
-    paths = ([Path(p) for p in args.paths] if args.paths
-             else [root / "src" / "repro"])
-    for p in paths:
+    scope_paths = ([Path(p).resolve() for p in args.paths] if args.paths
+                   else [root / "src" / "repro", root / "benchmarks"])
+    for p in scope_paths:
         if not p.exists():
             print(f"error: no such path: {p}", file=sys.stderr)
             return 2
+
+    since = "HEAD" if args.changed_only else args.since
+    if since is not None:
+        try:
+            changed = _changed_files(root, since)
+        except (subprocess.CalledProcessError, FileNotFoundError) as e:
+            detail = getattr(e, "stderr", "") or str(e)
+            print(f"error: git diff against {since!r} failed: "
+                  f"{detail.strip()}", file=sys.stderr)
+            return 2
+        # diff scope ∩ requested scope: a changed test fixture should
+        # not sneak into a src/repro-gated run
+        paths = [f for f in changed if f.exists() and any(
+            f == s or s in f.parents for s in scope_paths)]
+    else:
+        paths = scope_paths
 
     baseline_path = Path(args.baseline)
     try:
@@ -80,10 +134,17 @@ def main(argv: list[str] | None = None) -> int:
               f"grandfathered in {baseline_path}")
         return 0
 
+    rule_counts: dict[str, int] = {}
+    for f in result.findings:
+        rule_counts[f.rule] = rule_counts.get(f.rule, 0) + 1
+
     if args.format == "json":
         print(json.dumps({
             "schema": "repro-analysis/1",
             "files_scanned": len(result.files),
+            "rule_counts": dict(sorted(rule_counts.items())),
+            "rules_known": sorted(rid for ps in registered_passes()
+                                  for rid in ps.rules),
             "new": [f.to_json() for f in result.new],
             "grandfathered": [f.to_json()
                               for f in result.grandfathered],

@@ -109,7 +109,7 @@ def register(cls):
 
 def registered_passes() -> list[AnalysisPass]:
     # import for side effect: each pass module registers itself
-    from . import locks, parity, scanpurity, units  # noqa: F401
+    from . import locks, parity, races, scanpurity, units  # noqa: F401
     return list(_REGISTRY)
 
 

@@ -1,0 +1,829 @@
+"""Shared-state race pass: Eraser-style lockset analysis for the
+threaded runtime.
+
+The lock pass (``locks.py``) checks lock *discipline* — ordering, the
+TryLock never-block rule, the stats-lock family — but says nothing
+about whether shared state is actually *protected*.  This pass closes
+that gap with a static lockset analysis in the Eraser tradition
+(Savage et al., SOSP '97), scoped to where Python threads actually
+race: classes that spawn ``threading.Thread``s or hand methods to a
+thread-running host (the ``Runtime(process=self._ingest, ...)`` shape).
+
+Three rules:
+
+  - **RACE001** — an attribute written by two different thread roles
+    (or by two instances of one multiply-spawned thread body) whose
+    write-site locksets have an empty intersection: no one lock
+    protects every write, so updates interleave.
+  - **RACE002** — an unsynchronized read-modify-write of shared state:
+    ``self.x += 1`` (or ``self.x = f(self.x)``) with no lock held, or a
+    check-then-act (``if self.flag: ... self.flag = ...``) whose test
+    and write are not atomic.  Under the GIL a plain store is atomic
+    but a load-op-store is not — this is the rule the PR-6
+    stats-buffering bug class falls under.
+  - **RACE003** — partially-constructed ``self`` escaping to a thread:
+    a ``Thread(target=self.m).start()`` runs before a field that ``m``
+    reads is assigned, so the thread can observe the attribute missing
+    or half-initialized.
+
+Thread entry points are discovered structurally:
+``threading.Thread(target=...)`` sites (``self.method``, lambdas,
+``functools.partial``, nested ``def``s), plus methods that *escape* as
+call arguments (``Runtime(process=self._ingest)``) in classes that own
+locks — those run on the host's poller threads.  A thread spawned
+inside a loop or comprehension is *multiple* threads (one role, many
+instances).  Function-scope spawns get the RMW check on closed-over
+names.
+
+Lifecycle methods (``__init__``/``start``/``stop``/``reset``/
+``close``) are exempt from RACE001/002 as in LOCK003 — they run while
+the threads are quiescent — but RACE003 looks precisely at them.
+
+Like the rest of the suite the analysis is class-local and
+intra-procedural on purpose: cross-object sharing (a ``BoundedQueue``
+mutated by another class's threads) is the dynamic sanitizer's job
+(``repro.analysis.sanitizer``), which confirms or refutes these
+findings against real runs.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+from .core import ERROR, AnalysisPass, Finding, SourceFile, register
+from .locks import _EXEMPT_METHODS, _MUTATORS, _dotted, _lock_key
+
+__all__ = ["RacePass"]
+
+# constructors whose product is a synchronization object, not data
+_SYNC_CTORS = {"Lock", "RLock", "Condition", "Semaphore",
+               "BoundedSemaphore", "Event", "Barrier", "TryLock", "local"}
+_LOCKISH_CTORS = {"Lock", "RLock", "Condition", "Semaphore",
+                  "BoundedSemaphore", "TryLock"}
+_CALLER_ROLE = "<caller>"
+# deque/list mutators that are single-bytecode atomic under the GIL and
+# therefore not a read-modify-write by themselves
+_RMW_SAFE_MUTATORS = {"append", "appendleft", "popleft", "pop", "add"}
+
+
+def _last_seg(dotted: str | None) -> str | None:
+    return dotted.split(".")[-1] if dotted else None
+
+
+def _ctor_name(value: ast.AST) -> str | None:
+    """Constructor basename if ``value`` is a call like
+    ``threading.Lock()`` / ``TryLock()``, else None."""
+    if isinstance(value, ast.Call):
+        return _last_seg(_dotted(value.func))
+    return None
+
+
+def _is_thread_ctor(call: ast.Call) -> bool:
+    return _last_seg(_dotted(call.func)) == "Thread"
+
+
+def _thread_target_expr(call: ast.Call) -> ast.AST | None:
+    for kw in call.keywords:
+        if kw.arg == "target":
+            return kw.value
+    return None
+
+
+@dataclass
+class _Access:
+    root: str                 # "self.stats"
+    kind: str                 # "read" | "write" | "rmw"
+    lockset: frozenset
+    line: int
+    col: int
+    method: str               # lexical scope the access lives in
+    rmw_kind: str = ""        # "augassign" | "reassign" | "cta"
+
+
+@dataclass
+class _Role:
+    rid: str                  # entry method name, or _CALLER_ROLE
+    methods: set
+    multi: bool = False       # role runs as >= 2 OS threads
+
+
+@dataclass
+class _Spawn:
+    """One resolved thread entry: which method body runs on the thread
+    and whether the spawn site creates several threads."""
+    entry: str
+    multi: bool
+
+
+def _self_aliases(fn) -> dict[str, str]:
+    """Local name -> dotted self path (``st = self.stats``)."""
+    out: dict[str, str] = {}
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            d = _dotted(node.value)
+            if d and d.startswith("self."):
+                out[node.targets[0].id] = d
+    return out
+
+
+class _AccessScanner:
+    """Walk one function body tracking held locks and recording every
+    read/write/RMW of a ``self.<attr>`` root (aliases resolved)."""
+
+    def __init__(self, sf: SourceFile, method: str, aliases: dict[str, str],
+                 skip_roots, method_names):
+        self.sf = sf
+        self.method = method
+        self.aliases = aliases
+        self.skip_roots = skip_roots        # sync/lock/thread-handle attrs
+        self.method_names = method_names
+        self.accesses: list[_Access] = []
+        self.cta: list[_Access] = []
+
+    # -- resolution ------------------------------------------------------------
+    def _root(self, dotted: str | None) -> str | None:
+        if not dotted:
+            return None
+        head, _, rest = dotted.partition(".")
+        base = self.aliases.get(head, head)
+        if base.startswith("self.") and head != "self":
+            dotted = f"{base}.{rest}" if rest else base
+        elif head != "self":
+            return None
+        parts = dotted.split(".")
+        if len(parts) < 2:
+            return None
+        attr = parts[1]
+        if attr == "[]" or attr in self.skip_roots:
+            return None
+        if attr in self.method_names:
+            return None                    # bound-method reference, not data
+        if "lock" in attr.lower() or "mutex" in attr.lower():
+            return None
+        return f"self.{attr}"
+
+    def _record(self, root, kind, node, held, rmw_kind=""):
+        if root is None:
+            return
+        self.accesses.append(_Access(
+            root=root, kind=kind, lockset=frozenset(h for h in held),
+            line=node.lineno, col=node.col_offset,
+            method=self.method, rmw_kind=rmw_kind))
+
+    # -- expression-level accesses ----------------------------------------------
+    def _reads(self, expr: ast.AST, held) -> None:
+        """Record reads of self-rooted names in ``expr`` (topmost
+        attribute chains only)."""
+        for root, node in self._read_roots(expr):
+            self._record(root, "read", node, held)
+
+    def _read_roots(self, expr: ast.AST):
+        out = []
+
+        def walk(n: ast.AST) -> None:
+            if isinstance(n, (ast.Attribute, ast.Subscript)):
+                d = _dotted(n)
+                root = self._root(d)
+                if root is not None:
+                    out.append((root, n))
+                    # don't descend into the chain itself, but do walk
+                    # subscript slices and call args hanging off it
+                    if isinstance(n, ast.Subscript):
+                        walk(n.slice)
+                    return
+                for child in ast.iter_child_nodes(n):
+                    walk(child)
+                return
+            if isinstance(n, ast.Name):
+                root = self._root(n.id)
+                if root is not None:
+                    out.append((root, n))
+                return
+            for child in ast.iter_child_nodes(n):
+                walk(child)
+
+        walk(expr)
+        return out
+
+    def _expr_accesses(self, stmt: ast.stmt, held) -> None:
+        """Accesses inside one simple statement."""
+        if isinstance(stmt, ast.Assign):
+            value_roots = {r for r, _ in self._read_roots(stmt.value)}
+            self._reads(stmt.value, held)
+            for tgt in stmt.targets:
+                if isinstance(tgt, (ast.Attribute, ast.Subscript)):
+                    root = self._root(_dotted(tgt))
+                    if root in value_roots:
+                        self._record(root, "rmw", stmt, held,
+                                     rmw_kind="reassign")
+                    else:
+                        self._record(root, "write", stmt, held)
+                    if isinstance(tgt, ast.Subscript):
+                        self._reads(tgt.slice, held)
+            return
+        if isinstance(stmt, ast.AugAssign):
+            if isinstance(stmt.target, (ast.Attribute, ast.Subscript)):
+                root = self._root(_dotted(stmt.target))
+                self._record(root, "rmw", stmt, held, rmw_kind="augassign")
+                if isinstance(stmt.target, ast.Subscript):
+                    self._reads(stmt.target.slice, held)
+            self._reads(stmt.value, held)
+            return
+        # everything else: record mutator calls as writes, the rest as reads
+        for node in ast.walk(stmt):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _MUTATORS):
+                root = self._root(_dotted(node.func.value))
+                if root is not None:
+                    kind = ("write" if node.func.attr in _RMW_SAFE_MUTATORS
+                            else "rmw")
+                    rmw_kind = "" if kind == "write" else "augassign"
+                    self._record(root, kind, node, held, rmw_kind=rmw_kind)
+        self._reads(stmt, held)
+
+    # -- statement walker with lock tracking -------------------------------------
+    def scan(self, body: list) -> None:
+        self._stmts(body, [])
+
+    def scan_expr(self, expr: ast.AST) -> None:
+        """For lambda bodies: expression-only scan, nothing held."""
+        self._reads(expr, [])
+
+    def _stmts(self, stmts: list, held: list) -> None:
+        held = list(held)
+        for st in stmts:
+            if (isinstance(st, ast.Expr) and isinstance(st.value, ast.Call)
+                    and isinstance(st.value.func, ast.Attribute)
+                    and st.value.func.attr == "release"):
+                key = _lock_key(st.value.func.value)
+                if key:
+                    held = [h for h in held if h != key]
+                continue
+            if isinstance(st, ast.With):
+                inner = list(held)
+                for item in st.items:
+                    key = _lock_key(item.context_expr)
+                    if key:
+                        inner.append(key)
+                self._stmts(st.body, inner)
+                continue
+            if isinstance(st, ast.If):
+                key = self._try_acquire_test(st.test)
+                if key:
+                    self._stmts(st.body, held + [key])
+                    self._stmts(st.orelse, held)
+                    continue
+                nkey = self._not_acquire_test(st.test)
+                if nkey and st.body and isinstance(
+                        st.body[-1], (ast.Return, ast.Raise,
+                                      ast.Continue, ast.Break)):
+                    self._stmts(st.body, held)
+                    held.append(nkey)
+                    continue
+                self._reads(st.test, held)
+                mark = len(self.accesses)
+                self._stmts(st.body, held)
+                self._stmts(st.orelse, held)
+                if not held:
+                    self._check_then_act(st, mark)
+                continue
+            if isinstance(st, (ast.For, ast.AsyncFor)):
+                self._reads(st.iter, held)
+                self._stmts(st.body, held)
+                self._stmts(st.orelse, held)
+                continue
+            if isinstance(st, ast.While):
+                self._reads(st.test, held)
+                self._stmts(st.body, held)
+                self._stmts(st.orelse, held)
+                continue
+            if isinstance(st, ast.Try):
+                self._stmts(st.body, held)
+                for h in st.handlers:
+                    self._stmts(h.body, held)
+                self._stmts(st.orelse, held)
+                self._stmts(st.finalbody, held)
+                continue
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue                    # nested defs scanned separately
+            self._expr_accesses(st, held)
+            # a blocking .acquire() in statement position starts a hold
+            for node in ast.walk(st):
+                if (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "acquire"
+                        and not _call_is_nonblocking(node)):
+                    key = _lock_key(node.func.value)
+                    if key:
+                        held.append(key)
+
+    def _check_then_act(self, st: ast.If, mark: int) -> None:
+        """Lock-free ``if <reads self.X>:`` whose body writes the same
+        root lock-free: the test and the act are not atomic."""
+        tested = {r for r, _ in self._read_roots(st.test)}
+        if not tested:
+            return
+        for a in self.accesses[mark:]:
+            if (a.root in tested and a.kind in ("write", "rmw")
+                    and not a.lockset):
+                self.cta.append(_Access(
+                    root=a.root, kind="rmw", lockset=frozenset(),
+                    line=st.lineno, col=st.col_offset,
+                    method=self.method, rmw_kind="cta"))
+                tested.discard(a.root)
+                if not tested:
+                    return
+
+    @staticmethod
+    def _try_acquire_test(test: ast.AST) -> str | None:
+        if (isinstance(test, ast.Call)
+                and isinstance(test.func, ast.Attribute)):
+            if test.func.attr == "try_acquire":
+                return _lock_key(test.func.value) or \
+                    _last_seg(_dotted(test.func.value))
+            if (test.func.attr == "acquire"
+                    and _call_is_nonblocking(test)):
+                return _lock_key(test.func.value)
+        return None
+
+    @staticmethod
+    def _not_acquire_test(test: ast.AST) -> str | None:
+        if (isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not)
+                and isinstance(test.operand, ast.Call)):
+            call = test.operand
+            if isinstance(call.func, ast.Attribute) and \
+                    call.func.attr in ("acquire", "try_acquire"):
+                return _lock_key(call.func.value)
+        return None
+
+
+def _call_is_nonblocking(call: ast.Call) -> bool:
+    for kw in call.keywords:
+        if (kw.arg == "blocking" and isinstance(kw.value, ast.Constant)
+                and kw.value.value is False):
+            return True
+    return bool(call.args and isinstance(call.args[0], ast.Constant)
+                and call.args[0].value is False)
+
+
+@dataclass
+class _ClassModel:
+    node: ast.ClassDef
+    methods: dict = field(default_factory=dict)     # name -> FunctionDef
+    sync_attrs: set = field(default_factory=set)    # lock/event/thread attrs
+    lockish: bool = False                           # owns an actual lock
+    spawns: list = field(default_factory=list)      # list[_Spawn]
+    nested_entries: dict = field(default_factory=dict)  # synthetic id -> node
+
+
+def _in_multi_context(node: ast.AST, parents: dict) -> bool:
+    """Is ``node`` under a loop or comprehension (several spawns)?"""
+    cur = parents.get(node)
+    while cur is not None and not isinstance(
+            cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+        if isinstance(cur, (ast.For, ast.While, ast.ListComp, ast.SetComp,
+                            ast.GeneratorExp, ast.DictComp)):
+            return True
+        cur = parents.get(cur)
+    return False
+
+
+def _build_model(cls: ast.ClassDef, parents: dict) -> _ClassModel:
+    model = _ClassModel(node=cls)
+    for node in cls.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            model.methods[node.name] = node
+
+    local_defs: dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(cls):
+        if isinstance(node, ast.FunctionDef) and node.name not in model.methods:
+            local_defs[node.name] = node
+
+    # sync-object and thread-handle attributes are bookkeeping, not data
+    for node in ast.walk(cls):
+        if isinstance(node, ast.Assign):
+            ctor = _ctor_name(node.value)
+            elt_ctor = None
+            if isinstance(node.value, (ast.List, ast.ListComp)):
+                elt = (node.value.elts[0] if isinstance(node.value, ast.List)
+                       and node.value.elts else
+                       node.value.elt if isinstance(node.value, ast.ListComp)
+                       else None)
+                if isinstance(elt, ast.Call):
+                    elt_ctor = _last_seg(_dotted(elt.func))
+            for tgt in node.targets:
+                d = _dotted(tgt)
+                if d and d.startswith("self.") and len(d.split(".")) == 2:
+                    attr = d.split(".")[1]
+                    if ctor in _SYNC_CTORS or ctor == "Thread" or \
+                            elt_ctor == "Thread":
+                        model.sync_attrs.add(attr)
+                    if ctor in _LOCKISH_CTORS:
+                        model.lockish = True
+
+    def resolve_target(expr: ast.AST, aliases: dict[str, str],
+                       multi: bool) -> None:
+        if expr is None:
+            return
+        d = _dotted(expr)
+        if d and d.startswith("self."):
+            name = d.split(".")[1]
+            if name in model.methods:
+                model.spawns.append(_Spawn(entry=name, multi=multi))
+            return
+        if isinstance(expr, ast.Name):
+            if expr.id in aliases:
+                resolve_target(
+                    ast.parse(aliases[expr.id], mode="eval").body,
+                    aliases, multi)
+                return
+            fn = local_defs.get(expr.id)
+            if fn is not None:
+                sid = f"<def {fn.name}>"
+                model.nested_entries[sid] = fn
+                model.spawns.append(_Spawn(entry=sid, multi=multi))
+            return
+        if isinstance(expr, ast.Lambda):
+            sid = f"<lambda L{expr.lineno}>"
+            model.nested_entries[sid] = expr
+            model.spawns.append(_Spawn(entry=sid, multi=multi))
+            # calls to self.m inside the lambda are entries too
+            for n in ast.walk(expr.body):
+                if isinstance(n, ast.Call):
+                    cd = _dotted(n.func)
+                    if cd and cd.startswith("self."):
+                        m = cd.split(".")[1]
+                        if m in model.methods:
+                            model.spawns.append(_Spawn(entry=m, multi=multi))
+            return
+        if isinstance(expr, ast.Call) and \
+                _last_seg(_dotted(expr.func)) == "partial" and expr.args:
+            resolve_target(expr.args[0], aliases, multi)
+
+    # Thread(target=...) spawn sites
+    for m in model.methods.values():
+        aliases = _self_aliases(m)
+        for node in ast.walk(m):
+            if isinstance(node, ast.Call) and _is_thread_ctor(node):
+                multi = _in_multi_context(node, parents)
+                resolve_target(_thread_target_expr(node), aliases, multi)
+
+    # escaped methods: `self.m` handed to some call as an argument
+    # (Runtime(process=self._ingest, ...)): runs on the host's threads —
+    # only meaningful in classes that own locks or spawn threads anyway
+    for node in ast.walk(cls):
+        if isinstance(node, ast.Call):
+            arg_exprs = list(node.args) + [kw.value for kw in node.keywords
+                                           if kw.arg != "target"]
+            for a in arg_exprs:
+                d = _dotted(a)
+                if d and d.startswith("self.") and len(d.split(".")) == 2:
+                    name = d.split(".")[1]
+                    if name in model.methods:
+                        model.spawns.append(_Spawn(entry=name, multi=True))
+    return model
+
+
+def _closure(model: _ClassModel, entry: str) -> set:
+    """Method names reachable from ``entry`` via ``self.f()`` calls
+    (lifecycle methods excluded: they run quiescent)."""
+    out: set[str] = set()
+    work = [entry]
+    while work:
+        cur = work.pop()
+        if cur in out:
+            continue
+        out.add(cur)
+        fn = model.methods.get(cur) or model.nested_entries.get(cur)
+        if fn is None:
+            continue
+        walk_root = fn.body if not isinstance(fn, ast.Lambda) else fn.body
+        nodes = (ast.walk(fn) if not isinstance(fn, ast.Lambda)
+                 else ast.walk(walk_root))
+        for node in nodes:
+            if isinstance(node, ast.Call):
+                d = _dotted(node.func)
+                if d and d.startswith("self.") and len(d.split(".")) == 2:
+                    m = d.split(".")[1]
+                    if (m in model.methods and m not in out
+                            and m not in _EXEMPT_METHODS):
+                        work.append(m)
+    return out
+
+
+@register
+class RacePass(AnalysisPass):
+    name = "races"
+    rules = {
+        "RACE001": ("attribute written by two thread roles with an "
+                    "empty common lockset (Eraser-style shared-state "
+                    "race)"),
+        "RACE002": ("unsynchronized read-modify-write or "
+                    "check-then-act on shared state (lost-update "
+                    "race)"),
+        "RACE003": ("partially-constructed object escapes: a field the "
+                    "spawned thread reads is assigned after "
+                    "Thread.start()"),
+    }
+
+    def run(self, files: list[SourceFile]) -> list[Finding]:
+        out: list[Finding] = []
+        for sf in files:
+            parents: dict[ast.AST, ast.AST] = {}
+            for node in ast.walk(sf.tree):
+                for child in ast.iter_child_nodes(node):
+                    parents[child] = node
+            for node in ast.walk(sf.tree):
+                if isinstance(node, ast.ClassDef):
+                    out.extend(_check_class(sf, node, parents))
+            out.extend(_check_function_scope(sf, parents))
+        return out
+
+
+def _check_class(sf: SourceFile, cls: ast.ClassDef,
+                 parents: dict) -> list[Finding]:
+    model = _build_model(cls, parents)
+    if not model.spawns and not model.lockish:
+        return []
+
+    # roles: one per distinct entry + the implicit caller role
+    entries: dict[str, bool] = {}
+    for sp in model.spawns:
+        entries[sp.entry] = entries.get(sp.entry, False) or sp.multi
+    if not entries:
+        return []                 # lock-owning class but nothing concurrent
+
+    roles: list[_Role] = []
+    for entry, multi in sorted(entries.items()):
+        roles.append(_Role(rid=entry, methods=_closure(model, entry),
+                           multi=multi))
+    caller_methods = {m for m in model.methods
+                      if m not in entries and m not in _EXEMPT_METHODS}
+    roles.append(_Role(rid=_CALLER_ROLE, methods=caller_methods))
+
+    method_names = set(model.methods)
+    skip_roots = set(model.sync_attrs)
+
+    # scan every method + synthetic entry once
+    accesses: list[_Access] = []
+    cta: list[_Access] = []
+    for name, fn in model.methods.items():
+        sc = _AccessScanner(sf, name, _self_aliases(fn), skip_roots,
+                            method_names)
+        sc.scan(fn.body)
+        accesses.extend(sc.accesses)
+        cta.extend(sc.cta)
+    for sid, fn in model.nested_entries.items():
+        aliases = _self_aliases(fn) if not isinstance(fn, ast.Lambda) else {}
+        sc = _AccessScanner(sf, sid, aliases, skip_roots, method_names)
+        if isinstance(fn, ast.Lambda):
+            sc.scan_expr(fn.body)
+        else:
+            sc.scan(fn.body)
+        accesses.extend(sc.accesses)
+        cta.extend(sc.cta)
+
+    def roles_of(method: str) -> list[_Role]:
+        return [r for r in roles if method in r.methods]
+
+    # drop lifecycle-method accesses (threads quiescent there)
+    live = [a for a in accesses if a.method not in _EXEMPT_METHODS]
+    live_cta = [a for a in cta if a.method not in _EXEMPT_METHODS]
+
+    findings: list[Finding] = []
+
+    # -- RACE001/002: per-attribute write-lockset intersection ------------------
+    # A race needs *write concurrency*: two distinct roles writing, or
+    # one role spawned as several threads.  A lone writer's unguarded
+    # ``+=`` can't lose updates (GIL stores are atomic), so it stays
+    # silent — Eraser would flag it, Python need not.
+    by_root: dict[str, list[_Access]] = {}
+    for a in live:
+        by_root.setdefault(a.root, []).append(a)
+    cta_by_root: dict[str, list[_Access]] = {}
+    for a in live_cta:
+        cta_by_root.setdefault(a.root, []).append(a)
+    for root in sorted(by_root):
+        accs = by_root[root]
+        writes = [a for a in accs if a.kind in ("write", "rmw")]
+        if not writes:
+            continue
+        write_roles: set[str] = set()
+        multi_writer = False
+        for a in writes:
+            for r in roles_of(a.method):
+                write_roles.add(r.rid)
+                multi_writer |= r.multi
+        if _CALLER_ROLE in write_roles and len(write_roles) == 1:
+            continue                      # only ever written by the caller
+        concurrent = len(write_roles) >= 2 or multi_writer
+        if not concurrent:
+            continue
+        common = frozenset.intersection(*[a.lockset for a in writes])
+        if common:
+            continue
+        # precise diagnoses first: a check-then-act explains the whole
+        # test+write shape in its method; a bare RMW is its own story
+        ctas = sorted(cta_by_root.get(root, []),
+                      key=lambda x: (x.line, x.col))
+        for c in ctas:
+            findings.append(_race002(sf, c))
+        explained = {c.method for c in ctas}
+        remaining = [a for a in writes
+                     if not a.lockset and a.method not in explained]
+        if remaining and all(a.kind == "rmw" for a in remaining):
+            for a in sorted(remaining, key=lambda x: (x.line, x.col)):
+                findings.append(_race002(sf, a))
+            continue
+        if not remaining and ctas:
+            continue                      # fully explained by the CTAs
+        first = min(remaining or writes, key=lambda a: (a.line, a.col))
+        names = sorted(r for r in write_roles)
+        findings.append(Finding(
+            rule="RACE001", severity=ERROR, path=sf.rel,
+            line=first.line, col=first.col,
+            message=(f"'{root}' in class '{cls.name}' is written by "
+                     f"thread roles {', '.join(names)} with no common "
+                     "lock protecting the writes (empty lockset "
+                     "intersection)")))
+
+    findings.extend(_check_escape(sf, cls, model, roles))
+    return findings
+
+
+def _race002(sf: SourceFile, a: _Access) -> Finding:
+    what = ("check-then-act" if a.rmw_kind == "cta"
+            else "read-modify-write")
+    return Finding(
+        rule="RACE002", severity=ERROR, path=sf.rel,
+        line=a.line, col=a.col,
+        message=(f"unsynchronized {what} of '{a.root}' in "
+                 f"'{a.method}': no lock held, concurrent threads "
+                 "can lose updates"))
+
+
+def _check_escape(sf: SourceFile, cls: ast.ClassDef, model: _ClassModel,
+                  roles: list[_Role]) -> list[Finding]:
+    """RACE003: a field the spawned thread's closure reads is assigned
+    *after* the thread is started in the same method."""
+    reads_of_entry: dict[str, set] = {}
+    for r in roles:
+        if r.rid == _CALLER_ROLE:
+            continue
+        roots: set[str] = set()
+        for m in r.methods:
+            fn = model.methods.get(m) or model.nested_entries.get(m)
+            if fn is None:
+                continue
+            sc = _AccessScanner(sf, m, _self_aliases(fn)
+                                if not isinstance(fn, ast.Lambda) else {},
+                                model.sync_attrs, set(model.methods))
+            if isinstance(fn, ast.Lambda):
+                sc.scan_expr(fn.body)
+            else:
+                sc.scan(fn.body)
+            roots |= {a.root for a in sc.accesses}
+        reads_of_entry[r.rid] = roots
+
+    out: list[Finding] = []
+    for name, fn in model.methods.items():
+        aliases = _self_aliases(fn)
+        # bindings: local name / self attr -> entries its Thread targets
+        bound: dict[str, set] = {}
+        starts: list[tuple[int, str]] = []     # (line, entry)
+
+        def note_binding(tgt_d: str | None, value: ast.AST,
+                         local_bound: dict) -> None:
+            if not tgt_d:
+                return
+            found: set[str] = set()
+            for n in ast.walk(value):
+                if isinstance(n, ast.Call) and _is_thread_ctor(n):
+                    texpr = _thread_target_expr(n)
+                    d = _dotted(texpr) if texpr is not None else None
+                    if d and d.startswith("self."):
+                        m = d.split(".")[1]
+                        if m in model.methods:
+                            found.add(m)
+                    elif isinstance(texpr, ast.Name):
+                        found.add(f"<def {texpr.id}>")
+            if found:
+                local_bound[tgt_d] = found
+
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    note_binding(_dotted(tgt), node.value, bound)
+            elif isinstance(node, ast.For):
+                it = _dotted(node.iter)
+                tgt = _dotted(node.target)
+                if it in bound and tgt:
+                    bound[tgt] = bound[it]
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "start"):
+                base = _dotted(node.func.value)
+                for entry in sorted(bound.get(base, ())):
+                    starts.append((node.lineno, entry))
+                # inline Thread(...).start()
+                if isinstance(node.func.value, ast.Call) and \
+                        _is_thread_ctor(node.func.value):
+                    texpr = _thread_target_expr(node.func.value)
+                    d = _dotted(texpr) if texpr is not None else None
+                    if d and d.startswith("self."):
+                        m = d.split(".")[1]
+                        if m in model.methods:
+                            starts.append((node.lineno, m))
+        if not starts:
+            continue
+        first_start = min(line for line, _ in starts)
+        started_reads: set[str] = set()
+        for line, entry in starts:
+            started_reads |= reads_of_entry.get(entry, set())
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and node.lineno > first_start:
+                for tgt in node.targets:
+                    d = _dotted(tgt)
+                    root = None
+                    if d and d.startswith("self.") and len(d.split(".")) >= 2:
+                        root = "self." + d.split(".")[1]
+                    if root and root in started_reads:
+                        out.append(Finding(
+                            rule="RACE003", severity=ERROR, path=sf.rel,
+                            line=node.lineno, col=node.col_offset,
+                            message=(f"'{root}' in class '{cls.name}' is "
+                                     f"assigned in '{name}' after a "
+                                     "thread that reads it has started: "
+                                     "the thread can observe a "
+                                     "partially-constructed object")))
+    return out
+
+
+def _check_function_scope(sf: SourceFile, parents: dict) -> list[Finding]:
+    """Module/function-scope spawns: flag unguarded read-modify-writes
+    on closed-over names inside thread-target nested functions or
+    lambdas (the GIL makes plain stores atomic; += is not)."""
+    out: list[Finding] = []
+    for fn in ast.walk(sf.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        # skip methods: the class analysis owns those
+        if isinstance(parents.get(fn), ast.ClassDef):
+            continue
+        local_defs = {n.name: n for n in ast.walk(fn)
+                      if isinstance(n, ast.FunctionDef) and n is not fn}
+        spawned: list[tuple[ast.AST, bool]] = []
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and _is_thread_ctor(node):
+                texpr = _thread_target_expr(node)
+                multi = _in_multi_context(node, parents)
+                if isinstance(texpr, ast.Name) and texpr.id in local_defs:
+                    spawned.append((local_defs[texpr.id], multi))
+                elif isinstance(texpr, ast.Lambda):
+                    spawned.append((texpr, multi))
+        for worker, multi in spawned:
+            if isinstance(worker, ast.Lambda):
+                continue
+            worker_locals = {n.id for n in ast.walk(worker)
+                             if isinstance(n, ast.Name)
+                             and isinstance(n.ctx, ast.Store)}
+            worker_locals |= {a.arg for a in worker.args.args}
+            nonlocals = {nm for n in ast.walk(worker)
+                         if isinstance(n, ast.Nonlocal) for nm in n.names}
+            for node in ast.walk(worker):
+                if not isinstance(node, ast.AugAssign):
+                    continue
+                tgt = node.target
+                nm = tgt.id if isinstance(tgt, ast.Name) else None
+                if nm is None:
+                    continue
+                closed_over = nm in nonlocals or nm not in worker_locals
+                if not closed_over and nm not in nonlocals:
+                    continue
+                if not multi:
+                    continue
+                if _under_lock(node, worker, parents):
+                    continue
+                out.append(Finding(
+                    rule="RACE002", severity=ERROR, path=sf.rel,
+                    line=node.lineno, col=node.col_offset,
+                    message=(f"unsynchronized read-modify-write of "
+                             f"closed-over '{nm}' in thread body "
+                             f"'{worker.name}' spawned multiple times: "
+                             "concurrent threads can lose updates")))
+    return out
+
+
+def _under_lock(node: ast.AST, top: ast.AST, parents: dict) -> bool:
+    cur = parents.get(node)
+    while cur is not None and cur is not top:
+        if isinstance(cur, ast.With):
+            for item in cur.items:
+                if _lock_key(item.context_expr):
+                    return True
+        cur = parents.get(cur)
+    return False

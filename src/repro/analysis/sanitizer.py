@@ -1,0 +1,446 @@
+"""Dynamic concurrency sanitizer: the runtime counterpart of the
+static RACE pass.
+
+The static pass (``repro.analysis.races``) proves what it can from the
+AST; everything it reports is at best PLAUSIBLE — alias analysis is
+approximate and cross-object sharing is invisible to it.  This module
+closes the loop against *real* threaded runs:
+
+  - ``TracedLock`` / ``TracedTryLock`` wrap ``threading.Lock`` and the
+    project's ``TryLock``, maintaining a per-thread lockset plus
+    acquisition, contention, wait-time and hold-time telemetry
+    (log2-bucketed histograms);
+  - ``Sanitizer.trace(obj)`` instruments ``type(obj)`` so every
+    attribute read/write on the traced instance feeds an Eraser-style
+    lockset state machine (virgin → exclusive → shared →
+    shared-modified, candidate lockset intersected on each access);
+  - ``Sanitizer.validate(findings)`` maps static findings onto the
+    dynamic evidence: a finding whose (class, attribute) raced for real
+    becomes **CONFIRMED**, one that stayed clean in the observed run is
+    **UNOBSERVED** — never "refuted": dynamic analysis only sees the
+    schedules that happened.
+
+Two deliberate deviations from textbook Eraser, both to kill false
+positives Python's lifecycle patterns would otherwise produce:
+
+  - the candidate lockset is initialized at the first *second-thread*
+    access, not the first access ever — init-then-spawn (``__init__``
+    writes, worker reads) is the normal ownership transfer, not a race;
+  - dead threads are pruned from each shadow's thread set, so a
+    post-``join`` write by ``stop()`` (single live accessor again)
+    resets the state to exclusive instead of reporting.
+
+Stdlib-only (``threading``/``time``/``json``), like the rest of
+``repro.analysis``.  Usage::
+
+    with Sanitizer() as san:
+        san.instrument_runtime(rt)
+        rt.start(); ...; rt.stop()
+    assert san.confirmed_races() == []
+    san.save(Path("sanitizer_report.json"), static_findings)
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import threading
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+
+__all__ = ["Sanitizer", "TracedLock", "TracedTryLock", "LockTelemetry"]
+
+_QUOTED_SELF = re.compile(r"'self\.(\w+)'")
+_QUOTED_CLASS = re.compile(r"class '(\w+)'")
+_QUOTED_CLOSED = re.compile(r"closed-over '(\w+)'")
+
+
+def _bucket_ns(ns: int) -> int:
+    """Histogram bucket: floor(log2(ns)) — bucket b covers [2^b, 2^(b+1))."""
+    return max(0, int(ns).bit_length() - 1)
+
+
+@dataclass
+class LockTelemetry:
+    """Per-lock counters + log2(ns) histograms, JSON-serializable."""
+
+    name: str
+    acquisitions: int = 0
+    contentions: int = 0          # acquired while held / failed try_acquire
+    hold_ns_hist: dict = field(default_factory=dict)
+    wait_ns_hist: dict = field(default_factory=dict)
+
+    def record_wait(self, ns: int) -> None:
+        b = _bucket_ns(ns)
+        self.wait_ns_hist[b] = self.wait_ns_hist.get(b, 0) + 1
+
+    def record_hold(self, ns: int) -> None:
+        b = _bucket_ns(ns)
+        self.hold_ns_hist[b] = self.hold_ns_hist.get(b, 0) + 1
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "acquisitions": self.acquisitions,
+            "contentions": self.contentions,
+            "hold_ns_hist": {str(k): v
+                             for k, v in sorted(self.hold_ns_hist.items())},
+            "wait_ns_hist": {str(k): v
+                             for k, v in sorted(self.wait_ns_hist.items())},
+        }
+
+
+class TracedLock:
+    """A ``threading.Lock`` stand-in that tells the sanitizer who holds
+    what.  Supports the full surface the codebase uses: context
+    manager, ``acquire(blocking=...)``, ``release``, ``locked``."""
+
+    def __init__(self, inner, name: str, san: "Sanitizer"):
+        self._inner = inner
+        self._name = name
+        self._san = san
+        self._hold_t0: dict = {}            # thread ident -> acquire ns
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        t0 = time.monotonic_ns()
+        contended = self._inner.locked()
+        if timeout is not None and timeout >= 0:
+            ok = self._inner.acquire(blocking, timeout)
+        else:
+            ok = self._inner.acquire(blocking)
+        tele = self._san._telemetry(self._name)
+        if ok:
+            tele.acquisitions += 1
+            if contended:
+                tele.contentions += 1
+            tele.record_wait(time.monotonic_ns() - t0)
+            self._hold_t0[threading.get_ident()] = time.monotonic_ns()
+            self._san._held().add(self._name)
+        else:
+            tele.contentions += 1
+        return ok
+
+    def release(self) -> None:
+        ident = threading.get_ident()
+        t0 = self._hold_t0.pop(ident, None)
+        if t0 is not None:
+            self._san._telemetry(self._name).record_hold(
+                time.monotonic_ns() - t0)
+        self._san._held().discard(self._name)
+        self._inner.release()
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    def __enter__(self) -> bool:
+        return self.acquire()
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+class TracedTryLock:
+    """Wraps the project's ``TryLock``; unknown attributes (the
+    ``busy_tries``/``acquisitions`` telemetry counters, ``reset_stats``)
+    delegate to the wrapped lock so stats collection keeps working."""
+
+    def __init__(self, inner, name: str, san: "Sanitizer"):
+        # object.__setattr__ not needed: this class has a plain dict
+        self._inner = inner
+        self._name = name
+        self._san = san
+        self._hold_t0: dict = {}
+
+    def try_acquire(self) -> bool:
+        ok = self._inner.try_acquire()
+        tele = self._san._telemetry(self._name)
+        if ok:
+            tele.acquisitions += 1
+            self._hold_t0[threading.get_ident()] = time.monotonic_ns()
+            self._san._held().add(self._name)
+        else:
+            tele.contentions += 1
+        return ok
+
+    def release(self) -> None:
+        ident = threading.get_ident()
+        t0 = self._hold_t0.pop(ident, None)
+        if t0 is not None:
+            self._san._telemetry(self._name).record_hold(
+                time.monotonic_ns() - t0)
+        self._san._held().discard(self._name)
+        self._inner.release()
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    def __getattr__(self, name):
+        inner = self.__dict__.get("_inner")
+        if inner is None:
+            raise AttributeError(name)
+        return getattr(inner, name)
+
+
+_EXCLUSIVE = "exclusive"
+_SHARED = "shared"
+
+
+@dataclass
+class _Shadow:
+    """Eraser state for one (object, attribute)."""
+
+    threads: set = field(default_factory=set)
+    lockset: frozenset | None = None      # None until a 2nd thread appears
+    written_shared: bool = False
+    reported: bool = False
+
+    @property
+    def state(self) -> str:
+        return _SHARED if len(self.threads) > 1 else _EXCLUSIVE
+
+
+def _is_lock_like(value) -> bool:
+    return (hasattr(value, "release")
+            and (hasattr(value, "acquire") or hasattr(value, "try_acquire")))
+
+
+class Sanitizer:
+    """Instrument locks and attribute accesses, run the Eraser state
+    machine, and validate static RACE findings against the evidence."""
+
+    def __init__(self):
+        self._meta = threading.Lock()       # leaf lock for sanitizer state
+        self._tl = threading.local()
+        self._locks: dict[str, LockTelemetry] = {}
+        self._shadows: dict[tuple, _Shadow] = {}
+        self._races: list[dict] = []
+        self._traced_ids: set[int] = set()
+        self._patched: dict[type, tuple] = {}   # cls -> (orig_set, orig_get)
+        self._alive: set[int] = set()
+        self._alive_stamp = 0.0
+
+    # -- lifecycle --------------------------------------------------------------
+    def __enter__(self) -> "Sanitizer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.uninstrument()
+
+    def uninstrument(self) -> None:
+        """Restore every patched class.  Safe to call twice."""
+        with self._meta:
+            patched, self._patched = self._patched, {}
+            self._traced_ids.clear()
+        for cls, (orig_set, orig_get) in patched.items():
+            cls.__setattr__ = orig_set
+            cls.__getattribute__ = orig_get
+
+    # -- per-thread state -------------------------------------------------------
+    def _held(self) -> set:
+        held = getattr(self._tl, "held", None)
+        if held is None:
+            held = self._tl.held = set()
+        return held
+
+    def _in_hook(self) -> bool:
+        return getattr(self._tl, "busy", False)
+
+    def _telemetry(self, name: str) -> LockTelemetry:
+        tele = self._locks.get(name)
+        if tele is None:
+            with self._meta:
+                tele = self._locks.setdefault(name, LockTelemetry(name))
+        return tele
+
+    def _alive_idents(self) -> set:
+        # refreshing via threading.enumerate() on every access would
+        # dominate the run; a 1 ms cache is far finer than any
+        # spawn/join cadence that matters for liveness pruning
+        now = time.monotonic()
+        if now - self._alive_stamp > 1e-3:
+            self._alive = {t.ident for t in threading.enumerate()}
+            self._alive_stamp = now
+        return self._alive
+
+    # -- lock wrapping ----------------------------------------------------------
+    def wrap_lock(self, lock, name: str):
+        """Wrap a lock for tracing; picks the wrapper by duck type."""
+        if isinstance(lock, (TracedLock, TracedTryLock)):
+            return lock
+        if hasattr(lock, "try_acquire"):
+            return TracedTryLock(lock, name, self)
+        return TracedLock(lock, name, self)
+
+    # -- attribute tracing ------------------------------------------------------
+    def trace(self, obj) -> None:
+        """Record every attribute access on ``obj`` (patches
+        ``type(obj)``; only traced instances report)."""
+        cls = type(obj)
+        with self._meta:
+            self._traced_ids.add(id(obj))
+            if cls in self._patched:
+                return
+            orig_set = cls.__setattr__
+            orig_get = cls.__getattribute__
+            self._patched[cls] = (orig_set, orig_get)
+        san = self
+
+        def traced_setattr(inst, name, value):
+            orig_set(inst, name, value)
+            if san._in_hook() or name.startswith("__"):
+                return
+            san._tl.busy = True
+            try:
+                if id(inst) in san._traced_ids and not _is_lock_like(value):
+                    san._record(inst, name, is_write=True)
+            finally:
+                san._tl.busy = False
+
+        def traced_getattribute(inst, name):
+            value = orig_get(inst, name)
+            if san._in_hook() or name.startswith("__"):
+                return value
+            san._tl.busy = True
+            try:
+                if (id(inst) in san._traced_ids and not callable(value)
+                        and not _is_lock_like(value)):
+                    san._record(inst, name, is_write=False)
+            finally:
+                san._tl.busy = False
+            return value
+
+        cls.__setattr__ = traced_setattr
+        cls.__getattribute__ = traced_getattribute
+
+    # -- the Eraser state machine -----------------------------------------------
+    def _record(self, obj, attr: str, *, is_write: bool) -> None:
+        ident = threading.get_ident()
+        held = frozenset(self._held())
+        key = (id(obj), attr)
+        cls_name = type(obj).__name__
+        with self._meta:
+            sh = self._shadows.get(key)
+            if sh is None:
+                sh = self._shadows[key] = _Shadow(threads={ident})
+                return
+            if ident not in sh.threads:
+                sh.threads.add(ident)
+            if len(sh.threads) > 1:
+                alive = self._alive_idents()
+                sh.threads = {t for t in sh.threads
+                              if t == ident or t in alive}
+            if len(sh.threads) == 1:
+                # exclusive (possibly re-acquired after old owners died):
+                # no candidate lockset yet
+                sh.lockset = None
+                sh.written_shared = False
+                return
+            if sh.lockset is None:
+                sh.lockset = held
+            else:
+                sh.lockset = sh.lockset & held
+            if is_write:
+                sh.written_shared = True
+            if sh.written_shared and not sh.lockset and not sh.reported:
+                # the cheap alive-cache (1 ms) can hold just-joined
+                # threads; a report is rare enough to afford an exact
+                # re-check, which kills the read-after-join FP
+                self._alive = {t.ident for t in threading.enumerate()}
+                self._alive_stamp = time.monotonic()
+                sh.threads = {t for t in sh.threads
+                              if t == ident or t in self._alive}
+                if len(sh.threads) <= 1:
+                    sh.lockset = None
+                    sh.written_shared = False
+                    return
+                sh.reported = True
+                self._races.append({
+                    "class": cls_name,
+                    "attr": attr,
+                    "kind": "write" if is_write else "read",
+                    "threads": len(sh.threads),
+                    "thread": threading.current_thread().name,
+                })
+
+    # -- convenience instrumentation --------------------------------------------
+    def instrument_runtime(self, rt) -> None:
+        """Swap the Runtime's stats lock and every queue TryLock for
+        traced wrappers and trace the shared objects themselves."""
+        rt._stats_lock = self.wrap_lock(rt._stats_lock, "_stats_lock")
+        for i, q in enumerate(getattr(rt, "queues", [])):
+            q.lock = self.wrap_lock(q.lock, "queue.lock")
+            self.trace(q)
+        self.trace(rt)
+        stats = getattr(rt, "stats", None)
+        if stats is not None:
+            self.trace(stats)
+
+    def instrument_server(self, server) -> None:
+        server._submit_lock = self.wrap_lock(server._submit_lock,
+                                             "_submit_lock")
+        server._engine_lock = self.wrap_lock(server._engine_lock,
+                                             "_engine_lock")
+        self.trace(server)
+        self.instrument_runtime(server._runtime)
+
+    # -- results ----------------------------------------------------------------
+    def races(self) -> list[dict]:
+        with self._meta:
+            return list(self._races)
+
+    def confirmed_races(self) -> list[dict]:
+        """Deduplicated by (class, attr) — the assertion surface."""
+        seen, out = set(), []
+        for r in self.races():
+            k = (r["class"], r["attr"])
+            if k not in seen:
+                seen.add(k)
+                out.append(r)
+        return out
+
+    def lock_report(self) -> dict:
+        with self._meta:
+            return {name: tele.to_json()
+                    for name, tele in sorted(self._locks.items())}
+
+    def validate(self, findings) -> list[dict]:
+        """Static findings -> CONFIRMED / UNOBSERVED.
+
+        Accepts ``Finding`` objects or their ``to_json`` dicts; matches
+        on the attribute (and class, when the message names one) that
+        the static message quotes."""
+        raced = {(r["class"], r["attr"]) for r in self.races()}
+        raced_attrs = {a for _, a in raced}
+        out = []
+        for f in findings:
+            d = f if isinstance(f, dict) else f.to_json()
+            msg = d.get("message", "")
+            attrs = _QUOTED_SELF.findall(msg) + _QUOTED_CLOSED.findall(msg)
+            classes = _QUOTED_CLASS.findall(msg)
+            if classes and attrs:
+                hit = any((c, a) in raced for c in classes for a in attrs)
+            else:
+                hit = any(a in raced_attrs for a in attrs)
+            out.append({
+                "rule": d.get("rule"),
+                "fingerprint": d.get("fingerprint"),
+                "path": d.get("path"),
+                "attrs": attrs,
+                "status": "CONFIRMED" if hit else "UNOBSERVED",
+            })
+        return out
+
+    def report(self, static_findings=None) -> dict:
+        payload = {
+            "schema": "repro-sanitizer/1",
+            "races": self.confirmed_races(),
+            "locks": self.lock_report(),
+        }
+        if static_findings is not None:
+            payload["validated"] = self.validate(static_findings)
+        return payload
+
+    def save(self, path: Path, static_findings=None) -> None:
+        path.write_text(json.dumps(self.report(static_findings), indent=2)
+                        + "\n")

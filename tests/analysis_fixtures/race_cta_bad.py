@@ -1,0 +1,33 @@
+"""RACE002 known-bad (check-then-act): the worker thread and the
+caller both run ``if not self.claimed: self.claimed = True`` with no
+lock — the test and the act are not atomic, so both can win."""
+import threading
+
+
+class Claim:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._running = threading.Event()
+        self.claimed = False
+        self._thread = None
+
+    def start(self):
+        self._running.set()
+        self._thread = threading.Thread(target=self._work)
+        self._thread.start()
+
+    def stop(self):
+        self._running.clear()
+        self._thread.join()
+
+    def _work(self):
+        while self._running.is_set():
+            if not self.claimed:
+                self.claimed = True
+                return
+
+    def grab(self):
+        if not self.claimed:
+            self.claimed = True
+            return True
+        return False

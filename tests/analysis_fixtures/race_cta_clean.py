@@ -1,0 +1,34 @@
+"""Clean twin of race_cta_bad: the test and the act sit inside one
+lock region, so check-then-act is atomic."""
+import threading
+
+
+class Claim:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._running = threading.Event()
+        self.claimed = False
+        self._thread = None
+
+    def start(self):
+        self._running.set()
+        self._thread = threading.Thread(target=self._work)
+        self._thread.start()
+
+    def stop(self):
+        self._running.clear()
+        self._thread.join()
+
+    def _work(self):
+        while self._running.is_set():
+            with self._lock:
+                if not self.claimed:
+                    self.claimed = True
+                    return
+
+    def grab(self):
+        with self._lock:
+            if not self.claimed:
+                self.claimed = True
+                return True
+        return False

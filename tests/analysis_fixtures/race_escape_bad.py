@@ -1,0 +1,25 @@
+"""RACE003 known-bad: ``self`` escapes half-constructed.  The worker
+thread starts inside ``__init__`` and immediately reads
+``self.batches`` — which is only assigned on the *next* line, so the
+thread can observe the attribute missing entirely."""
+import threading
+
+
+class Loader:
+    def __init__(self, src):
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run)
+        self._thread.start()
+        self.batches = iter(src)
+
+    def _run(self):
+        while not self._stop.is_set():
+            with self._lock:
+                item = next(self.batches, None)
+            if item is None:
+                return
+
+    def close(self):
+        self._stop.set()
+        self._thread.join()

@@ -1,0 +1,24 @@
+"""Clean twin of race_escape_bad: every field the worker reads is
+assigned before the thread starts — ``start()`` is the last thing
+``__init__`` does."""
+import threading
+
+
+class Loader:
+    def __init__(self, src):
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self.batches = iter(src)
+        self._thread = threading.Thread(target=self._run)
+        self._thread.start()
+
+    def _run(self):
+        while not self._stop.is_set():
+            with self._lock:
+                item = next(self.batches, None)
+            if item is None:
+                return
+
+    def close(self):
+        self._stop.set()
+        self._thread.join()

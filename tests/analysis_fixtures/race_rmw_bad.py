@@ -1,0 +1,65 @@
+"""RACE002 known-bad: the PR-6 stats-buffering bug, reconstructed.
+
+Two sweep threads drain queues under each queue's TryLock, then flush
+their counters with ``self.wakeups += 1`` / ``self.items += got`` and
+*no* guard — exactly the shape PR 6 fixed in ``Runtime._run`` by
+buffering during the sweep and flushing under ``_stats_lock``.  A
+load-op-store is not atomic even under the GIL, so concurrent sweeps
+lose updates.  A function-scope twin of the same bug class rides along:
+``total += 1`` on a closed-over name from N spawned threads.
+"""
+import threading
+
+
+class Poller:
+    def __init__(self, queues):
+        self.queues = queues
+        self.wakeups = 0
+        self.items = 0
+        self._flush_lock = threading.Lock()
+        self._running = threading.Event()
+        self._workers = []
+
+    def start(self):
+        self._running.set()
+        self._workers = [threading.Thread(target=self._sweep)
+                         for _ in range(2)]
+        for t in self._workers:
+            t.start()
+
+    def stop(self):
+        self._running.clear()
+        for t in self._workers:
+            t.join()
+
+    def _sweep(self):
+        while self._running.is_set():
+            got = 0
+            for q in self.queues:
+                if q.lock.try_acquire():
+                    try:
+                        got += len(q.poll())
+                    finally:
+                        q.lock.release()
+            self.wakeups += 1
+            self.items += got
+
+    def snapshot(self):
+        with self._flush_lock:
+            return (self.wakeups, self.items)
+
+
+def run_workers(n):
+    total = 0
+
+    def work():
+        nonlocal total
+        for _ in range(1000):
+            total += 1
+
+    threads = [threading.Thread(target=work) for _ in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return total

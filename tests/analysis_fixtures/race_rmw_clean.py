@@ -1,0 +1,61 @@
+"""Clean twin of race_rmw_bad: the PR-6 *fix*.  Counters are buffered
+in locals during the TryLock sweep and flushed under one lock; the
+function-scope accumulator takes a lock around its increment."""
+import threading
+
+
+class Poller:
+    def __init__(self, queues):
+        self.queues = queues
+        self.wakeups = 0
+        self.items = 0
+        self._flush_lock = threading.Lock()
+        self._running = threading.Event()
+        self._workers = []
+
+    def start(self):
+        self._running.set()
+        self._workers = [threading.Thread(target=self._sweep)
+                         for _ in range(2)]
+        for t in self._workers:
+            t.start()
+
+    def stop(self):
+        self._running.clear()
+        for t in self._workers:
+            t.join()
+
+    def _sweep(self):
+        while self._running.is_set():
+            got = 0
+            for q in self.queues:
+                if q.lock.try_acquire():
+                    try:
+                        got += len(q.poll())
+                    finally:
+                        q.lock.release()
+            with self._flush_lock:
+                self.wakeups += 1
+                self.items += got
+
+    def snapshot(self):
+        with self._flush_lock:
+            return (self.wakeups, self.items)
+
+
+def run_workers(n):
+    total = 0
+    total_lock = threading.Lock()
+
+    def work():
+        nonlocal total
+        for _ in range(1000):
+            with total_lock:
+                total += 1
+
+    threads = [threading.Thread(target=work) for _ in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return total

@@ -1,0 +1,29 @@
+"""RACE001 known-bad: ``last_seen`` is written by the poller thread and
+by the caller with no common lock, so the writes interleave."""
+import threading
+
+
+class Telemetry:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._running = threading.Event()
+        self.last_seen = 0
+        self._threads = []
+
+    def start(self):
+        self._running.set()
+        self._threads = [threading.Thread(target=self._poll)]
+        for t in self._threads:
+            t.start()
+
+    def stop(self):
+        self._running.clear()
+        for t in self._threads:
+            t.join()
+
+    def _poll(self):
+        while self._running.is_set():
+            self.last_seen = 1
+
+    def record(self, value):
+        self.last_seen = value

@@ -1,0 +1,31 @@
+"""Clean twin of race_write_bad: every write to ``last_seen`` happens
+under the same lock, so the write locksets intersect."""
+import threading
+
+
+class Telemetry:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._running = threading.Event()
+        self.last_seen = 0
+        self._threads = []
+
+    def start(self):
+        self._running.set()
+        self._threads = [threading.Thread(target=self._poll)]
+        for t in self._threads:
+            t.start()
+
+    def stop(self):
+        self._running.clear()
+        for t in self._threads:
+            t.join()
+
+    def _poll(self):
+        while self._running.is_set():
+            with self._lock:
+                self.last_seen = 1
+
+    def record(self, value):
+        with self._lock:
+            self.last_seen = value

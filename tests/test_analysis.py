@@ -39,6 +39,14 @@ CASES = [
     ("lock_clean.py", {}),
     ("parity_bad", {"PARITY001": 2, "PARITY002": 3}),
     ("parity_clean", {}),
+    ("race_write_bad.py", {"RACE001": 1}),
+    ("race_write_clean.py", {}),
+    ("race_rmw_bad.py", {"RACE002": 3}),      # 2 class RMWs + closure RMW
+    ("race_rmw_clean.py", {}),
+    ("race_cta_bad.py", {"RACE002": 2}),      # check-then-act, both roles
+    ("race_cta_clean.py", {}),
+    ("race_escape_bad.py", {"RACE003": 1}),
+    ("race_escape_clean.py", {}),
 ]
 
 
@@ -70,6 +78,24 @@ def test_pr5_reconstruction_both_hazards():
     assert any("shadows" in m for m in msgs)
     assert any("overwritten before" in m for m in msgs)
     assert all("'win'" in m for m in msgs)
+
+
+def test_pr6_reconstruction_stats_buffering():
+    # the PR-6 bug: sweep threads flushed stats counters with no guard;
+    # the fixture reconstructs it and the RACE pass must name both
+    # counters plus the function-scope twin of the same bug class
+    msgs = [f.message for f in _analyze("race_rmw_bad.py").findings]
+    assert any("'self.wakeups'" in m for m in msgs)
+    assert any("'self.items'" in m for m in msgs)
+    assert any("closed-over 'total'" in m for m in msgs)
+
+
+def test_race_messages_name_roles_and_methods():
+    write = _analyze("race_write_bad.py").findings[0]
+    assert "_poll" in write.message          # the thread role
+    assert "Telemetry" in write.message      # the class
+    escape = _analyze("race_escape_bad.py").findings[0]
+    assert "__init__" in escape.message      # where the late write lives
 
 
 def test_clean_twins_are_parseable_python():
@@ -149,6 +175,45 @@ def test_cli_update_baseline_grandfathers(tmp_path, capsys):
                         "--baseline", baseline])
     capsys.readouterr()
     assert rc == 1
+
+
+def test_cli_json_rule_counts(tmp_path, capsys):
+    rc = analysis_main(["--paths", str(FIXTURES / "race_rmw_bad.py"),
+                        "--baseline", str(tmp_path / "b.json"),
+                        "--format", "json"])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert payload["rule_counts"] == {"RACE002": 3}
+    assert "RACE001" in payload["rules_known"]
+
+
+def test_cli_since_scopes_and_intersects(monkeypatch, tmp_path, capsys):
+    # the git diff says two files changed; only the one under --paths
+    # may be scanned (a changed src file must not leak into a
+    # fixtures-scoped run)
+    import repro.analysis.__main__ as cli
+    changed = [FIXTURES / "units_mix_bad.py",
+               REPO / "src" / "repro" / "analysis" / "core.py"]
+    monkeypatch.setattr(cli, "_changed_files", lambda root, since: changed)
+    rc = cli.main(["--since", "some-rev", "--paths", str(FIXTURES),
+                   "--baseline", str(tmp_path / "b.json")])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "UNITS001" in out
+    assert "1 file(s) scanned" in out
+
+
+def test_cli_bad_revision_exits_two(capsys):
+    rc = analysis_main(["--since", "definitely-not-a-revision"])
+    err = capsys.readouterr().err
+    assert rc == 2
+    assert "git diff" in err
+
+
+def test_cli_since_conflicts_with_changed_only():
+    with pytest.raises(SystemExit) as ei:
+        analysis_main(["--since", "HEAD", "--changed-only"])
+    assert ei.value.code == 2
 
 
 def test_cli_missing_path_exits_two(capsys):

@@ -753,3 +753,152 @@ def test_old_import_surface_unchanged():
         warnings.simplefilter("ignore", DeprecationWarning)
         for name in core.__all__:
             assert getattr(core, name) is not None, name
+
+
+# ---------------------------------------------------------------------------
+# dynamic concurrency sanitizer over real threaded runs (CI: -k threaded)
+# ---------------------------------------------------------------------------
+
+def _metronome_policy():
+    return MetronomePolicy(MetronomeConfig(m=2, v_target_us=500.0,
+                                           t_long_us=5_000.0))
+
+
+def test_threaded_runtime_sanitizer_confirms_no_races():
+    """The tier-1 race gate: a real instrumented Runtime run with the
+    Eraser state machine watching every queue/stats attribute access
+    must end with zero confirmed races, and the traced locks must have
+    recorded real hold-time telemetry."""
+    from repro.analysis.sanitizer import Sanitizer
+
+    q = BoundedQueue(4096)
+    seen = []
+    rt = Runtime([q], process=seen.extend, policy=_metronome_policy())
+    with Sanitizer() as san:
+        san.instrument_runtime(rt)
+        rt.start()
+        for i in range(50):
+            q.push(i)
+            time.sleep(0.001)
+        time.sleep(0.05)
+        rs = rt.stop()
+    assert rs.items == 50 and sorted(seen) == list(range(50))
+    assert san.confirmed_races() == []
+    locks = san.lock_report()
+    assert locks["_stats_lock"]["acquisitions"] > 0
+    assert locks["queue.lock"]["acquisitions"] > 0
+    assert sum(locks["_stats_lock"]["hold_ns_hist"].values()) > 0
+
+
+def test_threaded_server_sanitizer_confirms_no_races():
+    """Same gate through the serving layer: sharded ingress, the engine
+    lock's blocking/try-acquire split, and the runtime underneath."""
+    from repro.analysis.sanitizer import Sanitizer
+    from repro.serving import Server
+
+    class _NullEngine:
+        def submit(self, reqs):
+            pass
+
+        def pump(self):
+            return False
+
+    srv = Server(_NullEngine(), _metronome_policy(), n_queues=2)
+    with Sanitizer() as san:
+        san.instrument_server(srv)
+        srv.start()
+        for i in range(30):
+            srv.submit([i])
+            time.sleep(0.001)
+        time.sleep(0.05)
+        srv.stop()
+    assert san.confirmed_races() == []
+    locks = san.lock_report()
+    assert {"_engine_lock", "_submit_lock", "_stats_lock",
+            "queue.lock"} <= set(locks)
+
+
+def test_threaded_sanitizer_catches_seeded_race():
+    """The gate must be able to fail: an intentionally unguarded
+    two-thread counter bump is reported, and validate() maps a static
+    finding quoting the same class/attribute to CONFIRMED."""
+    import threading
+
+    from repro.analysis.sanitizer import Sanitizer
+
+    class Buggy:
+        def __init__(self):
+            self.hits = 0
+
+        def worker(self):
+            for _ in range(20_000):
+                self.hits += 1
+
+    b = Buggy()
+    with Sanitizer() as san:
+        san.trace(b)
+        ts = [threading.Thread(target=b.worker) for _ in range(2)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+    races = san.confirmed_races()
+    assert [(r["class"], r["attr"]) for r in races] == [("Buggy", "hits")]
+
+    static = [{"rule": "RACE002", "fingerprint": "x", "path": "p",
+               "message": ("unsynchronized read-modify-write of "
+                           "'self.hits' in 'worker': no lock held, "
+                           "concurrent threads can lose updates")}]
+    (verdict,) = san.validate(static)
+    assert verdict["status"] == "CONFIRMED"
+
+
+def test_threaded_sanitizer_validates_static_fixture_findings(tmp_path):
+    """PLAUSIBLE -> UNOBSERVED plumbing: the static RACE findings from
+    the fixture suite stay UNOBSERVED against a clean run, and the
+    saved JSON report carries races + lock histograms + verdicts."""
+    import json as _json
+    from pathlib import Path
+
+    from repro.analysis import run_analysis
+    from repro.analysis.sanitizer import Sanitizer
+
+    repo = Path(__file__).resolve().parents[1]
+    fixtures = repo / "tests" / "analysis_fixtures"
+    static = run_analysis(
+        [fixtures / "race_write_bad.py", fixtures / "race_rmw_bad.py"],
+        root=repo).findings
+    assert static, "fixture findings expected"
+
+    q = BoundedQueue(1024)
+    rt = Runtime([q], process=lambda b: None, policy=_metronome_policy())
+    with Sanitizer() as san:
+        san.instrument_runtime(rt)
+        rt.start()
+        for i in range(10):
+            q.push(i)
+            time.sleep(0.001)
+        rt.stop()
+    report_path = tmp_path / "sanitizer_report.json"
+    san.save(report_path, static)
+    payload = _json.loads(report_path.read_text())
+    assert payload["schema"] == "repro-sanitizer/1"
+    assert payload["races"] == []
+    assert {v["status"] for v in payload["validated"]} == {"UNOBSERVED"}
+    assert payload["locks"]["queue.lock"]["acquisitions"] > 0
+
+
+def test_threaded_sanitizer_uninstrument_restores_classes():
+    """Tracing patches type(obj); leaving the context must restore the
+    class so later tests see pristine Runtime/queue behavior."""
+    from repro.analysis.sanitizer import Sanitizer
+
+    orig_set = BoundedQueue.__setattr__
+    orig_get = BoundedQueue.__getattribute__
+    q = BoundedQueue(16)
+    with Sanitizer() as san:
+        san.trace(q)
+        assert BoundedQueue.__setattr__ is not orig_set
+        q.push(1)
+    assert BoundedQueue.__setattr__ is orig_set
+    assert BoundedQueue.__getattribute__ is orig_get
