@@ -1,0 +1,213 @@
+"""Power & energy verdicts: the paper's CPU story, priced in joules.
+
+Metronome's pitch translated to energy: a sleep&wake poller's package
+power tracks the offered load (cores are awake roughly in proportion to
+rho, and between bursts they sit in a C-state), while a busy-poll core
+burns its dvfs-pinned active power flat — so busy-poll's energy *per
+packet* explodes exactly where Metronome's stays put: at low load.
+This suite measures two claims under ``DEEP_CSTATE_ENERGY_MODEL`` (the
+aggressive-deep-idle part where the effects are visible):
+
+  - ``power/rho<r>/energy_per_packet_nj``  metronome nJ/packet at each
+    load on a ladder, with busy-poll's nJ/packet and their ratio in the
+    derived fields.  Verdict inputs: busy-poll inflates >= 5x from the
+    high- to the low-load rung while metronome stays within 2.5x
+    (roughly flat), and busy-poll costs >= 5x metronome at low load;
+  - ``objective/rho<r>/ts_shift_us``       the energy-optimal table's
+    T_S minus the CPU-optimal table's, both distilled by
+    ``build_operating_table`` from ONE batched sweep whose T_S grid
+    straddles the model's 40us deep-state residency floor, under a
+    latency target that *binds* below that floor.  Verdict input: the
+    two tables pick genuinely different operating points — the CPU
+    argmin always stretches T_S to the feasible maximum (its cost is
+    monotone in the wake rate m/T_S), while the energy argmin prices
+    the C-state residency the governor charges per armed target and
+    lands elsewhere (here: a shorter T_S in the same shallow band plus
+    the deep-state T_L), spending strictly less energy at the same
+    latency target — the latency/power frontier genuinely differs from
+    the latency/CPU one;
+  - ``verdict/ok``                          all of the above.
+
+CLI: ``python -m benchmarks.power [--smoke]`` — ``--smoke`` runs the
+quick ladder and exits nonzero on a failed verdict (the CI job).
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+ROWS = list[tuple[str, float, str]]
+
+MU_MPPS = 29.76
+RHOS = (0.1, 0.3, 0.5, 0.7)
+LOW_RHO, HIGH_RHO = RHOS[0], RHOS[-1]
+# verdict floors/ceilings
+MIN_BUSY_INFLATION = 5.0    # busy nJ/pkt, low vs high load
+MAX_MET_INFLATION = 2.5     # metronome stays within this (roughly flat)
+MIN_LOW_LOAD_RATIO = 5.0    # busy vs metronome nJ/pkt at the low rung
+# ladder operating point: both timeouts sit past the deep model's
+# residency floors (T_S >= 40us, T_L >= 400us), so an idle metronome
+# core actually reaches the cheap states the model offers
+LADDER_T_S_US, LADDER_T_L_US, LADDER_M = 60.0, 600.0, 2
+# objective-divergence sweep: T_S straddles the deep model's 40us
+# residency floor, and the latency target binds BELOW it (T_S >= 48
+# measures ~22us+), so the two objectives must rank the shallow-band
+# points — where their costs genuinely disagree
+OBJ_T_S_GRID = (24.0, 36.0, 48.0, 60.0)
+OBJ_T_L_GRID = (300.0, 600.0)
+OBJ_M_GRID = (2, 3)
+OBJ_RHOS = (0.2, 0.3)
+OBJ_TARGET_LAT_US = 21.0
+OBJ_MAX_LOSS = 1e-2
+
+
+def _ladder(quick: bool) -> ROWS:
+    from repro.runtime import (
+        DEEP_CSTATE_ENERGY_MODEL,
+        BusyPollPolicy,
+        PoissonWorkload,
+        SimRunConfig,
+        SweepGrid,
+        simulate_batch,
+        simulate_run,
+    )
+    from repro.runtime.simcore import HR_SLEEP_MODEL
+
+    em = DEEP_CSTATE_ENERGY_MODEL
+    n_seeds = 4 if quick else 16
+    duration = 30_000.0 if quick else 120_000.0
+    cfg = SimRunConfig(duration_us=duration, sleep_model=HR_SLEEP_MODEL,
+                       energy_model=em)
+    pts = [dict(t_s_us=LADDER_T_S_US, t_l_us=LADDER_T_L_US, m=LADDER_M,
+                n_queues=1, rate_mpps=rho * MU_MPPS, seed=s)
+           for rho in RHOS for s in range(n_seeds)]
+    bs = simulate_batch(SweepGrid.of_points(pts), cfg, slot_us=0.5)
+    met_nj = bs.energy_per_packet_nj.reshape(len(RHOS), n_seeds).mean(axis=1)
+    met_w = bs.mean_power_w.reshape(len(RHOS), n_seeds).mean(axis=1)
+
+    rows: ROWS = []
+    busy_nj = np.empty(len(RHOS))
+    for k, rho in enumerate(RHOS):
+        rs = simulate_run(BusyPollPolicy(),
+                          PoissonWorkload(rho * MU_MPPS), cfg)
+        busy_nj[k] = rs.energy_per_packet_nj
+        rows.append((
+            f"power/rho{rho:.2f}/energy_per_packet_nj", float(met_nj[k]),
+            f"busy_poll_nj={busy_nj[k]:.1f};"
+            f"ratio={busy_nj[k] / met_nj[k]:.2f};"
+            f"metronome_w={met_w[k]:.2f};"
+            f"busy_poll_w={rs.mean_power_w:.2f};"
+            f"t_s_us={LADDER_T_S_US:g};t_l_us={LADDER_T_L_US:g};"
+            f"m={LADDER_M};seeds={n_seeds}"))
+
+    busy_infl = float(busy_nj[0] / busy_nj[-1])
+    met_infl = float(met_nj.max() / met_nj.min())
+    low_ratio = float(busy_nj[0] / met_nj[0])
+    ok = (busy_infl >= MIN_BUSY_INFLATION
+          and met_infl <= MAX_MET_INFLATION
+          and low_ratio >= MIN_LOW_LOAD_RATIO)
+    rows.append((
+        "power/low_load_inflation", busy_infl,
+        f"busy_nj_low_over_high={busy_infl:.2f};"
+        f"metronome_nj_spread={met_infl:.2f};"
+        f"busy_over_metronome_at_rho{LOW_RHO:g}={low_ratio:.2f};"
+        f"floors={MIN_BUSY_INFLATION:g}x_busy_"
+        f"{MAX_MET_INFLATION:g}x_met_{MIN_LOW_LOAD_RATIO:g}x_ratio;"
+        f"in_band={ok}"))
+    return rows, ok
+
+
+def _objective_divergence(quick: bool) -> ROWS:
+    from repro.runtime import (
+        DEEP_CSTATE_ENERGY_MODEL,
+        SimRunConfig,
+        SweepGrid,
+        build_operating_table,
+        simulate_batch,
+    )
+    from repro.runtime.simcore import HR_SLEEP_MODEL
+
+    rhos = np.asarray(OBJ_RHOS)
+    seeds = (0,) if quick else (0, 1)
+    cfg = SimRunConfig(duration_us=30_000.0 if quick else 60_000.0,
+                       sleep_model=HR_SLEEP_MODEL,
+                       energy_model=DEEP_CSTATE_ENERGY_MODEL)
+    grid = SweepGrid.product(t_s_us=OBJ_T_S_GRID, t_l_us=OBJ_T_L_GRID,
+                             m=OBJ_M_GRID, rate_mpps=rhos * MU_MPPS,
+                             seeds=seeds)
+    bs = simulate_batch(grid, cfg, slot_us=0.5)
+    # guard off (rel=5): we want the argmins over the RAW measured
+    # lattice — feasibility is still enforced through measured latency
+    # and loss, which is what the verdict is about
+    tables = {
+        obj: build_operating_table(
+            rhos=rhos, target_mean_latency_us=OBJ_TARGET_LAT_US,
+            t_s_grid=OBJ_T_S_GRID, t_l_grid=OBJ_T_L_GRID,
+            m_grid=OBJ_M_GRID, cfg=cfg, seeds=seeds, slot_us=0.5,
+            max_loss=OBJ_MAX_LOSS, analytic_guard_rel=5.0, sweep=bs,
+            objective=obj)
+        for obj in ("cpu", "energy")
+    }
+
+    rows: ROWS = []
+    diverged = strictly_cheaper = False
+    never_worse = True
+    for pc, pe in zip(tables["cpu"].points, tables["energy"].points):
+        point_differs = (pe.t_s_us, pe.t_l_us, pe.m) \
+            != (pc.t_s_us, pc.t_l_us, pc.m)
+        diverged = diverged or point_differs
+        strictly_cheaper = strictly_cheaper or (
+            point_differs and pe.energy_uj < pc.energy_uj)
+        never_worse = never_worse and pe.energy_uj <= pc.energy_uj + 1e-6
+        rows.append((
+            f"objective/rho{pc.rho:.2f}/ts_shift_us",
+            float(pe.t_s_us - pc.t_s_us),
+            f"cpu_pick=ts{pc.t_s_us:g}_tl{pc.t_l_us:g}_m{pc.m};"
+            f"energy_pick=ts{pe.t_s_us:g}_tl{pe.t_l_us:g}_m{pe.m};"
+            f"cpu_obj_energy_uj={pc.energy_uj:.0f};"
+            f"energy_obj_energy_uj={pe.energy_uj:.0f};"
+            f"cpu_obj_cores={pc.cpu_fraction:.4f};"
+            f"energy_obj_cores={pe.cpu_fraction:.4f};"
+            f"both_meet_target={pc.meets_target and pe.meets_target}"))
+    feasible = (all(p.meets_target for p in tables["cpu"].points)
+                and all(p.meets_target for p in tables["energy"].points))
+    ok = diverged and strictly_cheaper and never_worse and feasible
+    rows.append((
+        "objective/diverges", float(diverged),
+        f"tables_pick_different_points={diverged};"
+        f"energy_table_strictly_cheaper_somewhere={strictly_cheaper};"
+        f"energy_table_never_costlier={never_worse};"
+        f"all_points_feasible={feasible};in_band={ok}"))
+    return rows, ok
+
+
+def power(quick: bool = False) -> ROWS:
+    ladder_rows, ladder_ok = _ladder(quick)
+    obj_rows, obj_ok = _objective_divergence(quick)
+    verdict = ladder_ok and obj_ok
+    rows = ladder_rows + obj_rows
+    rows.append(("verdict/ok", float(verdict), f"ok={verdict}"))
+    return rows
+
+
+def main() -> None:
+    quick = "--smoke" in sys.argv or "--quick" in sys.argv
+    rows = power(quick=quick)
+    print("name,value,derived")
+    for name, val, derived in rows:
+        print(f"{name},{val:.4f},{derived}")
+    if "--smoke" in sys.argv:
+        ok = next(v for n, v, _ in rows if n == "verdict/ok")
+        if not ok:
+            print("SMOKE FAILED: busy-poll energy/packet did not inflate "
+                  "at low load, or the energy-objective table stopped "
+                  "diverging from the CPU-optimal one under deep "
+                  "C-states", file=sys.stderr)
+            sys.exit(1)
+        print("# smoke ok", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -58,6 +58,7 @@ def main() -> None:
     from benchmarks.fleet import fleet_bench
     from benchmarks.kernels_bench import kernels
     from benchmarks.policy_matrix import matrix_policies_workloads
+    from benchmarks.power import power
     from benchmarks.rss_skew import matrix_rss_skew
     from benchmarks.stepping import stepping_compare
     from benchmarks.sweep_frontier import sweep_frontier
@@ -94,7 +95,7 @@ def main() -> None:
         table3_nanosleep_loss, fig11_adaptation, fig12_dpdk_compare,
         matrix_policies_workloads, matrix_rss_skew, sweep_frontier,
         cpu_sharing, adaptation, fig15_applications, fleet_bench,
-        kernels, roofline, stepping_compare, compile_caches,
+        kernels, roofline, stepping_compare, power, compile_caches,
     ]
     print("name,us_per_call,derived")
     failures = 0

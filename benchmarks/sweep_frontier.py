@@ -122,11 +122,17 @@ def sweep_frontier(quick: bool = False, noisy: bool = False) -> ROWS:
         f"pts_per_s={len(grid) / max(execute, 1e-9):.0f};"
         f"interference={cfg.is_noisy}")]
 
-    # per-load Pareto frontier: min CPU within sliding latency bands
+    # per-load Pareto frontiers: min CPU within sliding latency bands,
+    # and the same cut through power (the energy model charges the whole
+    # host: active awake time + per-arm C-state residency + transitions)
+    em = cfg.energy_model
+    busy_w = em.active_power_w * em.dvfs_busy_scale
+    watts = bs.reshaped("mean_power_w").mean(axis=-1)[:, :, :, 0, :]
     bands = [5.0, 10.0, 15.0, 25.0, 50.0]
     for k, rho in enumerate(rhos):
         flat_lat = lat[..., k].ravel()
         flat_cpu = cpu[..., k].ravel()
+        flat_w = watts[..., k].ravel()
         ok = loss[..., k].ravel() <= max_loss
         for band in bands:
             sel = ok & (flat_lat <= band)
@@ -137,8 +143,17 @@ def sweep_frontier(quick: bool = False, noisy: bool = False) -> ROWS:
                 float(flat_cpu[sel].min()),
                 f"points={int(sel.sum())};"
                 f"best_lat_us={flat_lat[sel][flat_cpu[sel].argmin()]:.2f}"))
+            rows.append((
+                f"pfrontier/rho{rho:.2f}/lat_le_{band:g}us",
+                float(flat_w[sel].min()),
+                f"points={int(sel.sum())};busy_poll_w={busy_w:.2f};"
+                f"best_lat_us={flat_lat[sel][flat_w[sel].argmin()]:.2f}"))
         rows.append((f"frontier/rho{rho:.2f}/busy_poll", 1.0,
                      "spinning baseline: one full core by construction"))
+        rows.append((
+            f"pfrontier/rho{rho:.2f}/busy_poll_w", busy_w,
+            "spinning baseline: one core at dvfs-pinned active power, "
+            "flat in load"))
 
     # calibrated table over the same environment — reusing this sweep's
     # BatchStats, so the 2000+ points are simulated exactly once

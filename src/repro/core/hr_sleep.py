@@ -55,12 +55,21 @@ class SleepCalibration:
     """Host timer characteristics measured at import/calibration time."""
 
     margin_ns: int          # p99 overshoot of time.sleep for us-scale targets
-    min_sleep_ns: int       # mean achieved duration of time.sleep(1ns)
+    min_sleep_ns: int       # mean achieved duration of time.sleep(probe_ns)
     spin_resolution_ns: int  # granularity of perf_counter_ns spin loop
 
 
 def calibrate(samples: int = 200, probe_ns: int = 1_000) -> SleepCalibration:
-    """Measure the naive timer's overshoot so the hybrid knows its margin."""
+    """Measure the naive timer's overshoot so the hybrid knows its margin.
+
+    ``margin_ns`` is the p99 overshoot of ``time.sleep(probe_ns)``,
+    floored at both the measured spin resolution (a margin the spin
+    loop cannot even resolve buys no precision, it only burns CPU) and
+    1us (the smallest bulk/spin split worth making);
+    ``min_sleep_ns`` is the mean *achieved* duration of a
+    ``time.sleep(probe_ns)`` request — the shortest sleep this host's
+    timer can actually deliver at the probe scale, i.e. ``probe_ns``
+    plus the mean overshoot."""
     overshoot = np.empty(samples)
     for i in range(samples):
         t0 = time.perf_counter_ns()
@@ -72,8 +81,8 @@ def calibrate(samples: int = 200, probe_ns: int = 1_000) -> SleepCalibration:
     res = int(max(np.median(deltas), 1))
     margin = int(np.percentile(overshoot, 99))
     return SleepCalibration(
-        margin_ns=max(margin, 1_000),
-        min_sleep_ns=int(np.mean(overshoot) + probe_ns),
+        margin_ns=max(margin, res, 1_000),
+        min_sleep_ns=int(np.mean(overshoot)) + probe_ns,
         spin_resolution_ns=res,
     )
 

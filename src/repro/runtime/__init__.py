@@ -131,7 +131,12 @@ from .sim import (
     simulate_fleet_run,
     simulate_run,
 )
-from .simcore import FleetConfig
+from .simcore import (
+    DEEP_CSTATE_ENERGY_MODEL,
+    DEFAULT_ENERGY_MODEL,
+    EnergyModel,
+    FleetConfig,
+)
 from .stats import (
     QueueStats,
     Reservoir,
@@ -192,6 +197,9 @@ __all__ = [
     "NANOSLEEP_MODEL",
     "PERFECT_SLEEP_MODEL",
     "SimRunConfig",
+    "EnergyModel",
+    "DEFAULT_ENERGY_MODEL",
+    "DEEP_CSTATE_ENERGY_MODEL",
     "simulate_run",
     "FleetConfig",
     "simulate_fleet_run",

@@ -329,6 +329,23 @@ class _SlotStats(NamedTuple):
     lat_area: jnp.ndarray
     vac_sum: jnp.ndarray
     nv_sum: jnp.ndarray
+    ts_arms: jnp.ndarray       # T_S-class sleeps armed (empty + release)
+    energy_uj: jnp.ndarray     # EnergyModel charge (active + arms)
+
+
+def energy_arm_cost(target_us, sleep_states):
+    """Per-arm sleep + transition energy (uJ) of a traced sleep target:
+    the deepest C-state whose minimum residency fits pays
+    ``power_w * target + transition_uj`` (the next-timer-event governor
+    approximation — see ``simcore.EnergyModel``).  ``sleep_states`` is
+    the static shallow-to-deep tuple from ``EnergyModel.params()``."""
+    p_w = jnp.float32(sleep_states[0][0])
+    t_uj = jnp.float32(sleep_states[0][1])
+    for pw, tuj, thr_us in sleep_states[1:]:
+        fits = target_us >= thr_us
+        p_w = jnp.where(fits, jnp.float32(pw), p_w)
+        t_uj = jnp.where(fits, jnp.float32(tuj), t_uj)
+    return p_w * target_us + t_uj
 
 
 @dataclass
@@ -355,9 +372,14 @@ class BatchStats:
     lat_area: np.ndarray = field(default_factory=lambda: np.empty(0))
     vac_sum: np.ndarray = field(default_factory=lambda: np.empty(0))
     nv_sum: np.ndarray = field(default_factory=lambda: np.empty(0))
+    # energy accounting (cfg.energy_model): T_S-class arm count and the
+    # total charge — active_power*awake + per-arm C-state residency +
+    # transition energy (T_L-class arms == busy_tries)
+    ts_arms: np.ndarray = field(default_factory=lambda: np.empty(0))
+    energy_uj: np.ndarray = field(default_factory=lambda: np.empty(0))
     # cfg.window_us > 0: per-point windowed accumulators of shape
-    # (len(grid), n_windows, 4) — [offered, served, lat_area, awake] —
-    # the same raw sums the event engine's WindowAccum keeps
+    # (len(grid), n_windows, 5) — [offered, served, lat_area, awake,
+    # energy] — the same raw sums the event engine's WindowAccum keeps
     win: np.ndarray = field(default_factory=lambda: np.empty(0))
     # stepping diagnostics: which kernel produced this batch, its
     # compiled scan length, and per-point live-step / forced-step
@@ -393,6 +415,14 @@ class BatchStats:
         return self.nv_sum / np.maximum(self.cycles, 1.0)
 
     @property
+    def energy_per_packet_nj(self) -> np.ndarray:
+        return 1e3 * self.energy_uj / np.maximum(self.serviced, 1.0)
+
+    @property
+    def mean_power_w(self) -> np.ndarray:
+        return self.energy_uj / self.cfg.duration_us
+
+    @property
     def rho(self) -> np.ndarray:
         return self.grid.rate_mpps / self.cfg.service_rate_mpps
 
@@ -423,7 +453,8 @@ class BatchStats:
             window_us=float(self.cfg.window_us),
             service_rate_mpps=self.cfg.service_rate_mpps,
             offered=w[:, 0].copy(), served=w[:, 1].copy(),
-            lat_area_us=w[:, 2].copy(), awake_us=w[:, 3].copy())
+            lat_area_us=w[:, 2].copy(), awake_us=w[:, 3].copy(),
+            energy_uj=w[:, 4].copy())
 
     def tracking(self, i: int, target_latency_us: float, **kw):
         """``TrackingStats`` for point ``i`` against its schedule's
@@ -452,10 +483,11 @@ class BatchStats:
             busy_tries=int(self.busy_tries[i]),
             items=int(self.serviced[i]), offered=int(self.offered[i]),
             dropped=int(self.dropped[i]),
-            awake_ns=int(self.awake_us[i] * 1e3), started_ns=0,
-            stopped_ns=int(self.cfg.duration_us * 1e3),
+            awake_ns=round(self.awake_us[i] * 1e3), started_ns=0,
+            stopped_ns=round(self.cfg.duration_us * 1e3),
             latency_us=Reservoir(4, seed=int(p["seed"])),
             latency_area_us=float(self.lat_area[i]),
+            energy_uj=float(self.energy_uj[i]),
             # no per-packet samples in the slot engine: mean is measured
             # (Little), p99/worst are coarse analytic estimates
             latency_override={
@@ -483,6 +515,7 @@ class BatchStats:
 def _build_sweep(n_slots: int, slot_us: float, m_max: int, q_max: int,
                  mu: float, capacity: float, wake_cost_us: float,
                  sleep_params: tuple, interference_params: tuple,
+                 energy_params: tuple,
                  n_seg: int = 0, n_windows: int = 0,
                  window_us: float = 0.0):
     """Build + jit the vmapped fixed-slot kernel for one static shape.
@@ -491,11 +524,16 @@ def _build_sweep(n_slots: int, slot_us: float, m_max: int, q_max: int,
     a piecewise-constant load schedule as ``(edges, scales)`` rows of
     width ``n_seg``, looked up per slot (the arrival rate becomes
     ``lam * scale(now)``).  ``n_windows > 0`` additionally accumulates
-    the per-window [offered, served, lat_area, awake] sums the
+    the per-window [offered, served, lat_area, awake, energy] sums the
     adaptation-tracking layer consumes (same convention as the event
-    engine's ``WindowAccum``)."""
+    engine's ``WindowAccum``).  ``energy_params`` is the static
+    ``EnergyModel.params()`` tuple; per-arm C-state charges are
+    closed-form per point (the targets T_S/T_L are per-point traced
+    scalars), so the energy column costs one fused multiply-add per
+    slot."""
     base_us, slope, sigma_us, tail_prob, tail_mean_us = sleep_params
     intf_prob, intf_mean_us, stall_rate, stall_mean_us = interference_params
+    active_power_w, _dvfs_scale, e_states = energy_params
     # exact per-slot hit probability of the Poisson stall-start process
     stall_p = 1.0 - math.exp(-stall_rate * slot_us) if stall_rate else 0.0
     dt = slot_us
@@ -507,6 +545,11 @@ def _build_sweep(n_slots: int, slot_us: float, m_max: int, q_max: int,
         tmask = t_idx < m
         qmask = q_idx < nq
         lam_q = jnp.where(qmask, lam / nq, 0.0)
+        # per-arm energy of the point's two sleep classes — the C-state
+        # follows the programmed target (event-engine convention), so
+        # both charges are point constants hoisted out of the scan
+        e_arm_s = energy_arm_cost(t_s, e_states)
+        e_arm_l = energy_arm_cost(t_l, e_states)
 
         # both 32-bit halves of the 64-bit seed are folded in, so seeds
         # differing only in their high bits stay independent
@@ -607,6 +650,7 @@ def _build_sweep(n_slots: int, slot_us: float, m_max: int, q_max: int,
             cycles = jnp.float32(0.0)
             vac_sum = jnp.float32(0.0)
             nv_sum = jnp.float32(0.0)
+            ts_arm = jnp.float32(0.0)
             for i in range(m_max):            # static unroll, m_max small
                 w = woken[i]
                 free_q = qmask & ~occ
@@ -624,6 +668,7 @@ def _build_sweep(n_slots: int, slot_us: float, m_max: int, q_max: int,
                 vac_timer = jnp.where(claim_any, 0.0, vac_timer)
                 cycles = cycles + (do_attach | empty_claim)
                 busy_tries = busy_tries + blocked
+                ts_arm = ts_arm + empty_claim
                 attached = attached.at[i].set(
                     jnp.where(do_attach, qi, attached[i]))
                 occ = occ | claim_hot
@@ -642,6 +687,7 @@ def _build_sweep(n_slots: int, slot_us: float, m_max: int, q_max: int,
             q_done = occ & (backlog <= 1e-6)
             att_q = jnp.clip(attached, 0, q_max - 1)
             t_done = (attached >= 0) & q_done[att_q]
+            ts_arm = ts_arm + t_done.sum()
             sleep_rem = jnp.where(t_done, slp_s, sleep_rem)
             attached = jnp.where(t_done, -1, attached)
             occ = occ & ~q_done
@@ -650,6 +696,12 @@ def _build_sweep(n_slots: int, slot_us: float, m_max: int, q_max: int,
             vac_timer = vac_timer + jnp.where(qmask & ~occ, dt, 0.0)
             lat_area = backlog.sum() * dt
 
+            # energy: active power over the slot's awake time plus the
+            # per-arm C-state charges (blocked wakes re-arm T_L)
+            awake_step = n_wake * wake_cost_us + served / mu
+            energy_step = (active_power_w * awake_step
+                           + ts_arm * e_arm_s + busy_tries * e_arm_l)
+
             S = _SlotStats(
                 offered=S.offered + offered,
                 dropped=S.dropped + dropped,
@@ -657,19 +709,20 @@ def _build_sweep(n_slots: int, slot_us: float, m_max: int, q_max: int,
                 wakeups=S.wakeups + n_wake,
                 busy_tries=S.busy_tries + busy_tries,
                 cycles=S.cycles + cycles,
-                awake_us=S.awake_us + n_wake * wake_cost_us + served / mu,
+                awake_us=S.awake_us + awake_step,
                 lat_area=S.lat_area + lat_area,
                 vac_sum=S.vac_sum + vac_sum,
                 nv_sum=S.nv_sum + nv_sum,
+                ts_arms=S.ts_arms + ts_arm,
+                energy_uj=S.energy_uj + energy_step,
             )
             if n_windows > 0:
                 # the event engine's WindowAccum convention: raw
-                # [offered, served, lat_area, awake] sums per window
+                # [offered, served, lat_area, awake, energy] per window
                 w = jnp.minimum((now / window_us).astype(jnp.int32),
                                 n_windows - 1)
                 win_acc = win_acc.at[w].add(jnp.stack([
-                    offered, served, lat_area,
-                    n_wake * wake_cost_us + served / mu]))
+                    offered, served, lat_area, awake_step, energy_step]))
             nxt = (sleep_rem, attached, backlog, vac_timer, arr_res,
                    stall_end, S, win_acc)
             gated = jax.tree_util.tree_map(
@@ -683,8 +736,8 @@ def _build_sweep(n_slots: int, slot_us: float, m_max: int, q_max: int,
                 jnp.zeros(q_max, jnp.float32),
                 jnp.zeros(q_max, jnp.float32),
                 jnp.float32(-1.0),          # stall_end: no window open
-                _SlotStats(z0, z0, z0, z0, z0, z0, z0, z0, z0, z0),
-                jnp.zeros((max(n_windows, 1), 4), jnp.float32))
+                _SlotStats(z0, z0, z0, z0, z0, z0, z0, z0, z0, z0, z0, z0),
+                jnp.zeros((max(n_windows, 1), 5), jnp.float32))
         (_, _, backlog_f, _, _, _, S, win_acc), _ = jax.lax.scan(
             step, init, jnp.arange(n_slots, dtype=jnp.int32))
         return S, win_acc, backlog_f.sum()
@@ -798,6 +851,7 @@ def simulate_batch(grid: SweepGrid, cfg: SimRunConfig | None = None, *,
             busy_tries=vals["busy_tries"], cycles=vals["cycles"],
             awake_us=vals["awake_us"], lat_area=vals["lat_area"],
             vac_sum=vals["vac_sum"], nv_sum=vals["nv_sum"],
+            ts_arms=vals["ts_arms"], energy_uj=vals["energy_uj"],
             win=win_np, stepping="adaptive", scan_len=int(scan_len),
             n_steps=vals["n_steps"], forced_steps=vals["forced_steps"],
             sim_time_us=simt, final_backlog=back_f)
@@ -816,6 +870,7 @@ def simulate_batch(grid: SweepGrid, cfg: SimRunConfig | None = None, *,
          float(sm.tail_prob), float(sm.tail_mean_us)),
         (float(cfg.interference_prob), float(cfg.interference_mean_us),
          float(cfg.stall_rate_per_us), float(cfg.stall_mean_us)),
+        cfg.energy_model.params(),
         n_seg, n_win_pad, float(cfg.window_us))
     seed64 = np.asarray(grid.seed, dtype=np.uint64)
     out, win, back_f = fn(
@@ -837,6 +892,7 @@ def simulate_batch(grid: SweepGrid, cfg: SimRunConfig | None = None, *,
                       busy_tries=vals["busy_tries"], cycles=vals["cycles"],
                       awake_us=vals["awake_us"], lat_area=vals["lat_area"],
                       vac_sum=vals["vac_sum"], nv_sum=vals["nv_sum"],
+                      ts_arms=vals["ts_arms"], energy_uj=vals["energy_uj"],
                       win=(np.asarray(win, dtype=np.float64)[:, :n_windows]
                            if n_windows else np.empty(0)),
                       stepping="fixed", scan_len=n_slots,

@@ -133,6 +133,8 @@ class _AdaptiveStats(NamedTuple):
     lat_area: jnp.ndarray
     vac_sum: jnp.ndarray
     nv_sum: jnp.ndarray
+    ts_arms: jnp.ndarray       # T_S-class sleeps armed (empty + release)
+    energy_uj: jnp.ndarray     # EnergyModel charge (active + arms)
     n_steps: jnp.ndarray
     forced_steps: jnp.ndarray
 
@@ -172,7 +174,8 @@ def estimate_adaptive_steps(grid, cfg: SimRunConfig, slot_us: float,
 def _build_adaptive_sweep(max_steps: int, slot_us: float, m_max: int,
                           q_max: int, mu: float, capacity: float,
                           wake_cost_us: float, sleep_params: tuple,
-                          interference_params: tuple, n_seg: int = 0,
+                          interference_params: tuple,
+                          energy_params: tuple, n_seg: int = 0,
                           n_windows: int = 0, window_us: float = 0.0):
     """Build + jit the vmapped event-jump kernel for one static shape.
 
@@ -183,8 +186,10 @@ def _build_adaptive_sweep(max_steps: int, slot_us: float, m_max: int,
     reaches its duration are dt=0 no-ops (carry held via a live mask),
     which is also what lets one step budget be shared across a vmapped
     batch and across the bucketing ladder."""
+    from .batched import energy_arm_cost
     base_us, slope, sigma_us, tail_prob, tail_mean_us = sleep_params
     intf_prob, intf_mean_us, stall_rate, stall_mean_us = interference_params
+    active_power_w, _dvfs_scale, e_states = energy_params
     t_idx = jnp.arange(m_max)
     q_idx = jnp.arange(q_max)
     floor_us = slot_us
@@ -193,6 +198,10 @@ def _build_adaptive_sweep(max_steps: int, slot_us: float, m_max: int,
                   sched_edges, sched_scales):
         tmask = t_idx < m
         qmask = q_idx < nq
+        # per-arm C-state charges are point constants (the target, not
+        # the realized vacancy, selects the state — see EnergyModel)
+        e_arm_s = energy_arm_cost(t_s, e_states)
+        e_arm_l = energy_arm_cost(t_l, e_states)
 
         # both 32-bit halves of the 64-bit seed are folded in, so seeds
         # differing only in their high bits stay independent
@@ -406,6 +415,7 @@ def _build_adaptive_sweep(max_steps: int, slot_us: float, m_max: int,
             cycles = jnp.float32(0.0)
             vac_sum = jnp.float32(0.0)
             nv_sum = jnp.float32(0.0)
+            ts_arm = t_done.sum().astype(jnp.float32)
             for i in range(m_max):            # static unroll, m_max small
                 w = woken[i]
                 free_q = qmask & ~occ
@@ -423,6 +433,7 @@ def _build_adaptive_sweep(max_steps: int, slot_us: float, m_max: int,
                 vac_timer = jnp.where(claim_any, 0.0, vac_timer)
                 cycles = cycles + (do_attach | empty_claim)
                 busy_tries = busy_tries + blocked
+                ts_arm = ts_arm + empty_claim
                 attached = attached.at[i].set(
                     jnp.where(do_attach, qi, attached[i]))
                 occ = occ | claim_hot
@@ -432,6 +443,11 @@ def _build_adaptive_sweep(max_steps: int, slot_us: float, m_max: int,
                               jnp.where(blocked, slp_l[i], 0.0)))
 
             rem_t = rem_t - dt
+            # energy: active power over this step's awake time plus the
+            # per-arm C-state charges (blocked wakes re-arm T_L)
+            awake_step = n_wake * wake_cost_us + served / mu
+            energy_step = (active_power_w * awake_step
+                           + ts_arm * e_arm_s + busy_tries * e_arm_l)
             A = _AdaptiveStats(
                 offered=A.offered + offered,
                 dropped=A.dropped + dropped,
@@ -439,10 +455,12 @@ def _build_adaptive_sweep(max_steps: int, slot_us: float, m_max: int,
                 wakeups=A.wakeups + n_wake,
                 busy_tries=A.busy_tries + busy_tries,
                 cycles=A.cycles + cycles,
-                awake_us=A.awake_us + n_wake * wake_cost_us + served / mu,
+                awake_us=A.awake_us + awake_step,
                 lat_area=A.lat_area + lat_area,
                 vac_sum=A.vac_sum + vac_sum,
                 nv_sum=A.nv_sum + nv_sum,
+                ts_arms=A.ts_arms + ts_arm,
+                energy_uj=A.energy_uj + energy_step,
                 n_steps=A.n_steps + 1.0,
                 forced_steps=A.forced_steps + forced.astype(jnp.float32),
             )
@@ -453,8 +471,7 @@ def _build_adaptive_sweep(max_steps: int, slot_us: float, m_max: int,
                 wi = jnp.clip((now / window_us).astype(jnp.int32),
                               0, n_windows - 1)
                 win_acc = win_acc.at[wi].add(jnp.stack([
-                    offered, served, lat_area,
-                    n_wake * wake_cost_us + served / mu]))
+                    offered, served, lat_area, awake_step, energy_step]))
             nxt = (sleep_rem, attached, backlog, vac_timer, arr_res,
                    stall_end, next_stall, rem_t, A, win_acc)
             # finished points hold their carry: every later step is a
@@ -473,8 +490,8 @@ def _build_adaptive_sweep(max_steps: int, slot_us: float, m_max: int,
                 next_stall0,
                 jnp.asarray(duration, jnp.float32),
                 _AdaptiveStats(z0, z0, z0, z0, z0, z0, z0, z0, z0, z0,
-                               z0, z0),
-                jnp.zeros((max(n_windows, 1), 4), jnp.float32))
+                               z0, z0, z0, z0),
+                jnp.zeros((max(n_windows, 1), 5), jnp.float32))
         (_, _, backlog_f, _, _, _, _, rem_f, A, win_acc), _ = \
             jax.lax.scan(step, init,
                          jnp.arange(max_steps, dtype=jnp.int32))
@@ -527,6 +544,7 @@ def adaptive_sweep_arrays(grid, cfg: SimRunConfig, slot_us: float):
          float(sm.tail_prob), float(sm.tail_mean_us)),
         (float(cfg.interference_prob), float(cfg.interference_mean_us),
          float(cfg.stall_rate_per_us), float(cfg.stall_mean_us)),
+        cfg.energy_model.params(),
         n_seg, n_windows, float(cfg.window_us))
     seed64 = np.asarray(grid.seed, dtype=np.uint64)
     n = len(grid)

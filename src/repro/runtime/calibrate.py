@@ -18,7 +18,8 @@ initial guess.  This module closes the loop empirically:
      event-driven engine (``simulate_run``) within the batched engine's
      documented parity tolerance — in the same environment the sweep
      ran in, OS interference and correlated stalls included;
-  4. for each offered load, select the cheapest point (min CPU) whose
+  4. for each offered load, select the cheapest point — min CPU by
+     default, min predicted energy with ``objective="energy"`` — whose
      mean latency meets the target -> an ``OperatingTable`` that
      records the environment it was calibrated for.
 
@@ -71,6 +72,10 @@ class OperatingPoint:
     cpu_fraction: float
     loss_fraction: float
     meets_target: bool = True
+    # predicted package energy over the calibration run (EnergyModel
+    # accounting; divide by the environment's duration_us for watts);
+    # 0.0 on tables predating the field
+    energy_uj: float = 0.0
 
 
 @dataclass(frozen=True)
@@ -278,11 +283,25 @@ def build_operating_table(
     schedule_check=None,
     fleet=None,
     stepping: str = "fixed",
+    objective: str = "cpu",
 ) -> OperatingTable:
     """Sweep (t_s x t_l x m x rho x seed) through the batched engine and
-    distill an ``OperatingTable``: per load, the minimum-CPU point whose
+    distill an ``OperatingTable``: per load, the minimum-cost point whose
     seed-averaged mean latency meets ``target_mean_latency_us`` (and
     loses at most ``max_loss``).
+
+    ``objective`` picks the cost that is minimized over the feasible set:
+    ``"cpu"`` (default, the historical behavior) selects minimum
+    ``cpu_fraction``; ``"energy"`` selects minimum ``energy_uj`` under
+    ``cfg.energy_model``.  The two tables genuinely differ under deep
+    C-states: CPU cost is monotone in the wake rate ``m / T_S``, so the
+    CPU argmin always stretches T_S to the latency-feasible maximum —
+    but the energy objective also pays ``m * P(state(T))`` C-state
+    residency plus per-wake transitions, so when the latency target
+    binds below a residency floor it ranks the remaining (shallow-band)
+    points differently and lands on another (T_S, T_L, M) entirely
+    (``benchmarks/power.py`` pins one such divergence).  Every point
+    records its ``energy_uj`` either way.
 
     ``analytic_guard_rel`` drops points whose measured mean vacation
     strays that far (relative) from the App-C closed form — a
@@ -335,6 +354,9 @@ def build_operating_table(
     """
     cfg = cfg or SimRunConfig(duration_us=60_000.0)
     validate_batched_config(cfg)
+    if objective not in ("cpu", "energy"):
+        raise ValueError(
+            f"objective must be 'cpu' or 'energy', got {objective!r}")
     if cfg.schedule is not None:
         raise ValueError(
             "calibration sweeps must run on stationary loads: each table "
@@ -383,6 +405,7 @@ def build_operating_table(
     cpu = bs.reshaped("cpu_fraction").mean(axis=-1)
     loss = bs.reshaped("loss_fraction").mean(axis=-1)
     vac = bs.reshaped("mean_vacation_us").mean(axis=-1)
+    energy = bs.reshaped("energy_uj").mean(axis=-1)
 
     ts_ax = np.atleast_1d(np.asarray(t_s_grid, dtype=np.float64))
     tl_ax = np.atleast_1d(np.asarray(t_l_grid, dtype=np.float64))
@@ -396,14 +419,15 @@ def build_operating_table(
                                 slack_us=cfg.interference_slack_us())
     feasible = valid & (lat <= target_mean_latency_us) & (loss <= max_loss)
 
+    cost = cpu if objective == "cpu" else energy
     points = []
     big = np.inf
     for k, rho in enumerate(rhos):
         feas_k = feasible[..., k]
         if feas_k.any():
-            cpu_k = np.where(feas_k, cpu[..., k], big)
-            i, j, l, _ = np.unravel_index(int(np.argmin(cpu_k)),
-                                          cpu_k.shape)
+            cost_k = np.where(feas_k, cost[..., k], big)
+            i, j, l, _ = np.unravel_index(int(np.argmin(cost_k)),
+                                          cost_k.shape)
             met = True
         else:
             lat_k = np.where(valid[..., k], lat[..., k], big)
@@ -416,11 +440,15 @@ def build_operating_table(
             rho=float(rho), t_s_us=float(ts_ax[i]), t_l_us=float(tl_ax[j]),
             m=int(m_ax[l]), mean_latency_us=float(lat[i, j, l, 0, k]),
             cpu_fraction=float(cpu[i, j, l, 0, k]),
-            loss_fraction=float(loss[i, j, l, 0, k]), meets_target=met))
+            loss_fraction=float(loss[i, j, l, 0, k]), meets_target=met,
+            energy_uj=float(energy[i, j, l, 0, k])))
 
     env = asdict(cfg)
     if fleet is not None:
         env["fleet"] = asdict(fleet)
+    # JSON-canonical from the start (tuples -> lists), so the recorded
+    # environment survives a to_json/from_json round trip unchanged
+    env = json.loads(json.dumps(env))
     table = OperatingTable(target_mean_latency_us=target_mean_latency_us,
                            service_rate_mpps=mu, points=tuple(points),
                            environment=env)

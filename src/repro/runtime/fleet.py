@@ -76,6 +76,7 @@ from .batched import (
     SweepGrid,
     _schedule_rows,
     bucket_steps,
+    energy_arm_cost,
     validate_batched_config,
 )
 from .batched_adaptive import (
@@ -175,6 +176,8 @@ class _FleetSlotStats(NamedTuple):
     lat_area: jnp.ndarray      # host queue-depth integral (packet*us)
     vac_sum: jnp.ndarray
     nv_sum: jnp.ndarray
+    ts_arms: jnp.ndarray       # T_S-class sleeps armed (empty + release)
+    energy_uj: jnp.ndarray     # EnergyModel charge (active + arms)
     topo_area: jnp.ndarray     # network delay integral (packet*us)
     hedge_dup: jnp.ndarray     # duplicate requests issued by this host
 
@@ -183,6 +186,7 @@ def _build_fleet_sweep(n_slots: int, slot_us: float, m_max: int,
                        q_max: int, n_hosts: int, mu: float,
                        capacity: float, wake_cost_us: float,
                        sleep_params: tuple, interference_params: tuple,
+                       energy_params: tuple,
                        n_seg: int, lb_code: int, lb_weights: tuple,
                        lb_softness_pkts: float, stale_every_slots: int,
                        far_count: int, near_cost_us: float,
@@ -214,6 +218,7 @@ def _build_fleet_sweep(n_slots: int, slot_us: float, m_max: int,
     """
     base_us, slope, sigma_us, tail_prob, tail_mean_us = sleep_params
     intf_prob, intf_mean_us, stall_rate, stall_mean_us = interference_params
+    active_power_w, _dvfs_scale, e_states = energy_params
     stall_p = 1.0 - math.exp(-stall_rate * slot_us) if stall_rate else 0.0
     dt = slot_us
     t_idx = jnp.arange(m_max)
@@ -230,6 +235,10 @@ def _build_fleet_sweep(n_slots: int, slot_us: float, m_max: int,
                   duration, sched_edges, sched_scales):
         tmask = t_idx < m
         qmask = q_idx < nq
+        # per-arm C-state charges are point constants shared by every
+        # host (the target, not the realized vacancy, picks the state)
+        e_arm_s = energy_arm_cost(t_s, e_states)
+        e_arm_l = energy_arm_cost(t_l, e_states)
 
         # per-host keys: host h draws the stream of a single-host run
         # seeded (seed + h) — the fleet<->single-host parity contract
@@ -318,6 +327,7 @@ def _build_fleet_sweep(n_slots: int, slot_us: float, m_max: int,
             cycles = jnp.float32(0.0)
             vac_sum = jnp.float32(0.0)
             nv_sum = jnp.float32(0.0)
+            ts_arm = jnp.float32(0.0)
             for i in range(m_max):          # static unroll, m_max small
                 w = woken[i]
                 free_q = qmask & ~occ
@@ -335,6 +345,7 @@ def _build_fleet_sweep(n_slots: int, slot_us: float, m_max: int,
                 vac_timer = jnp.where(claim_any, 0.0, vac_timer)
                 cycles = cycles + (do_attach | empty_claim)
                 busy_tries = busy_tries + blocked
+                ts_arm = ts_arm + empty_claim
                 attached = attached.at[i].set(
                     jnp.where(do_attach, qi, attached[i]))
                 occ = occ | claim_hot
@@ -349,6 +360,7 @@ def _build_fleet_sweep(n_slots: int, slot_us: float, m_max: int,
             q_done = occ & (backlog <= 1e-6)
             att_q = jnp.clip(attached, 0, q_max - 1)
             t_done = (attached >= 0) & q_done[att_q]
+            ts_arm = ts_arm + t_done.sum()
             sleep_rem = jnp.where(t_done, slp_s, sleep_rem)
             attached = jnp.where(t_done, -1, attached)
             occ = occ & ~q_done
@@ -356,8 +368,12 @@ def _build_fleet_sweep(n_slots: int, slot_us: float, m_max: int,
             vac_timer = vac_timer + jnp.where(qmask & ~occ, dt, 0.0)
             lat_area = backlog.sum() * dt
 
+            awake_step = n_wake * wake_cost_us + served / mu
+            energy_step = (active_power_w * awake_step
+                           + ts_arm * e_arm_s + busy_tries * e_arm_l)
             out = (offered, dropped, served, n_wake, busy_tries, cycles,
-                   vac_sum, nv_sum, adm.sum(), lat_area)
+                   vac_sum, nv_sum, adm.sum(), lat_area, ts_arm,
+                   energy_step)
             return (sleep_rem, attached, backlog, vac_timer, arr_res,
                     stall_end), out
 
@@ -392,7 +408,8 @@ def _build_fleet_sweep(n_slots: int, slot_us: float, m_max: int,
               f_res, f_stall)
             (f_sleep, f_att, f_back, f_vac, f_res, f_stall) = new_carry
             (offered_h, dropped_h, served_h, n_wake_h, busy_h, cycles_h,
-             vac_h, nv_h, adm_h, lat_area_h) = outs
+             vac_h, nv_h, adm_h, lat_area_h, ts_arm_h,
+             energy_h) = outs
             back_tot = f_back.sum(axis=1)              # (H,) packets
 
             # 2. topology: admitted packets pay rack cost; far packets
@@ -440,6 +457,8 @@ def _build_fleet_sweep(n_slots: int, slot_us: float, m_max: int,
                 lat_area=S.lat_area + lat_area_h,
                 vac_sum=S.vac_sum + vac_h,
                 nv_sum=S.nv_sum + nv_h,
+                ts_arms=S.ts_arms + ts_arm_h,
+                energy_uj=S.energy_uj + energy_h,
                 topo_area=S.topo_area + topo_area_h,
                 hedge_dup=S.hedge_dup + dup_h,
             )
@@ -462,7 +481,7 @@ def _build_fleet_sweep(n_slots: int, slot_us: float, m_max: int,
                     jnp.full((n_hosts,), -1.0, jnp.float32),
                     zh,                          # stale LB snapshot
                     _FleetSlotStats(zh, zh, zh, zh, zh, zh, zh, zh, zh,
-                                    zh, zh, zh))
+                                    zh, zh, zh, zh, zh))
             (*_, S), _ = jax.lax.scan(
                 fleet_step, init, jnp.arange(n_slots, dtype=jnp.int32))
             n_live = jnp.minimum(jnp.ceil(duration / dt),
@@ -656,6 +675,7 @@ def _build_fleet_sweep(n_slots: int, slot_us: float, m_max: int,
                 cycles = jnp.float32(0.0)
                 vac_sum = jnp.float32(0.0)
                 nv_sum = jnp.float32(0.0)
+                ts_arm = t_done.sum().astype(jnp.float32)
                 for i in range(m_max):      # static unroll, m_max small
                     w = woken[i]
                     free_q = qmask & ~occ
@@ -674,6 +694,7 @@ def _build_fleet_sweep(n_slots: int, slot_us: float, m_max: int,
                     vac_timer = jnp.where(claim_any, 0.0, vac_timer)
                     cycles = cycles + (do_attach | empty_claim)
                     busy_tries = busy_tries + blocked
+                    ts_arm = ts_arm + empty_claim
                     attached = attached.at[i].set(
                         jnp.where(do_attach, qi, attached[i]))
                     occ = occ | claim_hot
@@ -681,8 +702,13 @@ def _build_fleet_sweep(n_slots: int, slot_us: float, m_max: int,
                         jnp.where(empty_claim, slp_s[i],
                                   jnp.where(blocked, slp_l[i], 0.0)))
 
+                awake_step = n_wake * wake_cost_us + served / mu
+                energy_step = (active_power_w * awake_step
+                               + ts_arm * e_arm_s
+                               + busy_tries * e_arm_l)
                 out = (offered, dropped, served, n_wake, busy_tries,
-                       cycles, vac_sum, nv_sum, adm.sum(), lat_area)
+                       cycles, vac_sum, nv_sum, adm.sum(), lat_area,
+                       ts_arm, energy_step)
                 return (sleep_rem, attached, backlog, vac_timer, arr_res,
                         stall_end, next_stall), out
 
@@ -692,7 +718,8 @@ def _build_fleet_sweep(n_slots: int, slot_us: float, m_max: int,
             (a_sleep, a_att, a_back, a_vac, a_res, a_stall,
              a_next) = new_carry
             (offered_h, dropped_h, served_h, n_wake_h, busy_h, cycles_h,
-             vac_h, nv_h, adm_h, lat_area_h) = outs
+             vac_h, nv_h, adm_h, lat_area_h, ts_arm_h,
+             energy_h) = outs
             back_tot = a_back.sum(axis=1)
 
             # topology — the macro-slot's admissions pay rack + link
@@ -736,6 +763,8 @@ def _build_fleet_sweep(n_slots: int, slot_us: float, m_max: int,
                 lat_area=SA.lat_area + lat_area_h,
                 vac_sum=SA.vac_sum + vac_h,
                 nv_sum=SA.nv_sum + nv_h,
+                ts_arms=SA.ts_arms + ts_arm_h,
+                energy_uj=SA.energy_uj + energy_h,
                 topo_area=SA.topo_area + topo_area_h,
                 hedge_dup=SA.hedge_dup + dup_h,
             )
@@ -761,7 +790,7 @@ def _build_fleet_sweep(n_slots: int, slot_us: float, m_max: int,
                   jnp.asarray(duration, jnp.float32),
                   z0, z0,                    # n_steps, forced_steps
                   _FleetSlotStats(zh, zh, zh, zh, zh, zh, zh, zh, zh,
-                                  zh, zh, zh))
+                                  zh, zh, zh, zh, zh))
         (*_, rem_f, nst, fst, SA), _ = jax.lax.scan(
             fleet_step_a, init_a, jnp.arange(n_slots, dtype=jnp.int32))
         return SA, duration - rem_f, nst, fst
@@ -808,6 +837,8 @@ class FleetStats:
     lat_area: np.ndarray = field(default_factory=lambda: np.empty(0))
     vac_sum: np.ndarray = field(default_factory=lambda: np.empty(0))
     nv_sum: np.ndarray = field(default_factory=lambda: np.empty(0))
+    ts_arms: np.ndarray = field(default_factory=lambda: np.empty(0))
+    energy_uj: np.ndarray = field(default_factory=lambda: np.empty(0))
     topo_area: np.ndarray = field(default_factory=lambda: np.empty(0))
     hedge_dup: np.ndarray = field(default_factory=lambda: np.empty(0))
     # stepping diagnostics (see BatchStats): which kernel ran, its
@@ -846,6 +877,22 @@ class FleetStats:
         """(P,) cores burned by the whole fleet (the verdict metric —
         a busy-poll fleet pins n_hosts cores)."""
         return self.awake_us.sum(axis=1) / self.cfg.duration_us
+
+    @property
+    def host_power_w(self) -> np.ndarray:
+        """(P, H) mean package power per host."""
+        return self.energy_uj / self.cfg.duration_us
+
+    @property
+    def total_energy_uj(self) -> np.ndarray:
+        """(P,) cluster energy (the power half of the verdict metric)."""
+        return self.energy_uj.sum(axis=1)
+
+    @property
+    def energy_per_packet_nj(self) -> np.ndarray:
+        """(P,) cluster energy per served packet."""
+        return (1e3 * self.energy_uj.sum(axis=1)
+                / np.maximum(self.serviced.sum(axis=1), 1.0))
 
     @property
     def mean_latency_us(self) -> np.ndarray:
@@ -920,12 +967,13 @@ class FleetStats:
                 items=int(self.serviced[i, h]),
                 offered=int(self.offered[i, h]),
                 dropped=int(self.dropped[i, h]),
-                awake_ns=int(self.awake_us[i, h] * 1e3),
+                awake_ns=round(self.awake_us[i, h] * 1e3),
                 started_ns=0,
-                stopped_ns=int(self.cfg.duration_us * 1e3),
+                stopped_ns=round(self.cfg.duration_us * 1e3),
                 latency_us=Reservoir(4, seed=int(p["seed"]) + h),
                 latency_area_us=float(self.lat_area[i, h]
                                       + self.topo_area[i, h]),
+                energy_uj=float(self.energy_uj[i, h]),
                 latency_override={
                     "mean": mean,
                     "p99": mean * 3.0,
@@ -1007,6 +1055,7 @@ def simulate_fleet(fgrid: FleetGrid, cfg: SimRunConfig | None = None, *,
          float(sm.tail_prob), float(sm.tail_mean_us)),
         (float(cfg.interference_prob), float(cfg.interference_mean_us),
          float(cfg.stall_rate_per_us), float(cfg.stall_mean_us)),
+        cfg.energy_model.params(),
         n_seg, _LB_CODE[fleet.lb], lb_weights,
         float(fleet.lb_softness_pkts), stale_every_slots,
         fleet.far_hosts(), float(fleet.near_cost_us),

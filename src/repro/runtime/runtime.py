@@ -50,6 +50,7 @@ from .assignment import SharedAssignment, ThreadSlot
 from .dispatch import RoundRobinDispatch
 from .policy import WakeContext
 from .queues import BoundedQueue
+from .simcore import DEFAULT_ENERGY_MODEL
 from .stats import QueueStats, Reservoir, RunStats
 
 __all__ = ["Runtime"]
@@ -69,6 +70,7 @@ class Runtime:
         latency_reservoir: int = 65_536,
         assignment=None,
         app_load=None,
+        energy_model=DEFAULT_ENERGY_MODEL,
     ):
         """``process`` consumes a burst of retrieved items; ``idle_work``
         (optional) is polled during the busy period after each burst and
@@ -82,13 +84,19 @@ class Runtime:
         start and stop with the pollers, and the work it completed and
         CPU it burned land in ``RunStats.app_ops`` /
         ``RunStats.app_cpu_ns`` (the application-throughput side of the
-        sharing trade-off)."""
+        sharing trade-off).  ``energy_model`` (an
+        ``repro.runtime.simcore.EnergyModel``) prices the run's counters
+        into the model-based ``RunStats.energy_uj`` estimate at
+        ``stop()`` — real threads have no wattmeter, so the same model
+        the simulators account exactly is applied to the measured
+        wake/awake/busy-try counters."""
         self.queues = queues
         self.process = process
         self.policy = policy
         self.assignment = assignment or SharedAssignment()
         self.burst_size = burst_size
         self.sleep_fn = sleep_fn
+        self.energy_model = energy_model
         self.idle_work = idle_work
         self.app_load = app_load
         self._app_threads: list[threading.Thread] = []
@@ -172,7 +180,35 @@ class Runtime:
             # By construction a spinning policy never sleeps: charge one
             # full core per thread (the paper's DPDK baseline accounting).
             st.awake_ns = st.duration_ns * max(len(self._threads), 1)
+        st.energy_uj = self._estimate_energy_uj(st)
         return st
+
+    def _estimate_energy_uj(self, st: RunStats) -> float:
+        """Model-based energy from the run's counters (no wattmeter on
+        real threads): a spinning policy burns flat active power at the
+        DVFS busy frequency on every thread; a sleeping policy pays
+        active power over measured CPU time plus one C-state arm charge
+        per wake — T_L-priced for the busy-try share of wakes (the lock
+        was taken, the policy demoted), T_S-priced for the rest.  The
+        targets are the policy's *current* timeouts, so an adaptive
+        run's estimate is priced at its converged operating point."""
+        em = self.energy_model
+        if em is None:
+            return 0.0
+        if getattr(self.policy, "spin", False):
+            return float(em.active_energy_uj(st.duration_ns / 1e3,
+                                             spin=True)
+                         * max(len(self._threads), 1))
+        pol = self.policy
+        t_s_us = getattr(pol, "t_short_us", None)
+        if t_s_us is None:
+            t_s_us = getattr(pol, "period_us", 0.0)
+        t_l_us = getattr(getattr(pol, "cfg", None), "t_long_us", t_s_us)
+        tl_arms = min(st.busy_tries, st.wakeups)
+        ts_arms = st.wakeups - tl_arms
+        return float(em.active_power_w * st.awake_ns / 1e3
+                     + ts_arms * em.arm_energy_uj(float(t_s_us))
+                     + tl_arms * em.arm_energy_uj(float(t_l_us)))
 
     # -- the paper's loop, policy-parameterized ----------------------------------
     def _run(self, slot: ThreadSlot | None = None) -> None:

@@ -113,6 +113,12 @@ def simulate_run(policy, workload, cfg: SimRunConfig | None = None, *,
     lat_q = queue_reservoirs(cfg, nq)
     awake_us = 0.0
     lat_area = 0.0           # queue-depth integral (packet*us), Little's law
+    # EnergyModel accounting: active power on awake time, sleep +
+    # transition charged per armed sleep at its programmed target (the
+    # same arm-time convention as the batched kernels; the m initial
+    # staggering sleeps are uncharged in every engine)
+    em = cfg.energy_model
+    energy_uj = 0.0
 
     nbins = int(cfg.duration_us / cfg.timeseries_bin_us) if cfg.timeseries_bin_us else 0
     b_rho = np.zeros(max(nbins, 1)); b_ts = np.zeros(max(nbins, 1))
@@ -227,7 +233,9 @@ def simulate_run(policy, workload, cfg: SimRunConfig | None = None, *,
                 continue
         wakeups += 1
         awake_us += cfg.wake_cost_us
-        wa.add(t, awake=cfg.wake_cost_us)
+        e_wake = em.active_power_w * cfg.wake_cost_us
+        energy_uj += e_wake
+        wa.add(t, awake=cfg.wake_cost_us, energy_uj=e_wake)
         advance_arrivals(t)
 
         slot = slots[i]
@@ -262,7 +270,9 @@ def simulate_run(policy, workload, cfg: SimRunConfig | None = None, *,
                 busy_until[q] = t_cursor + b_time
                 last_busy_end[q] = busy_until[q]
                 awake_us += b_time
-                wa.add(t_cursor, awake=b_time)
+                e_busy = em.active_power_w * b_time
+                energy_uj += e_busy
+                wa.add(t_cursor, awake=b_time, energy_uj=e_busy)
 
                 vac.append(v); bus.append(b_time); nvs.append(n_v)
                 # Latency: packets found at busy start waited (uniform
@@ -293,6 +303,9 @@ def simulate_run(policy, workload, cfg: SimRunConfig | None = None, *,
             # ring's only home poller, in which case it keeps its cadence)
             t_b = pol.on_wake(WakeContext(primary=not slot.demote_on_miss,
                                           now_ns=int(t * 1e3))) / 1e3
+            e_arm = em.arm_energy_uj(t_b)
+            energy_uj += e_arm
+            wa.add(t, energy_uj=e_arm)
             delay = float(cfg.sleep_model.sample(t_b, rng))
             if cfg.interference_prob and rng.random() < cfg.interference_prob:
                 delay += rng.exponential(cfg.interference_mean_us)
@@ -301,6 +314,9 @@ def simulate_run(policy, workload, cfg: SimRunConfig | None = None, *,
 
         t_s = pol.on_wake(WakeContext(primary=True,
                                       now_ns=int(t_cursor * 1e3))) / 1e3
+        e_arm = em.arm_energy_uj(t_s)
+        energy_uj += e_arm
+        wa.add(t_cursor, energy_uj=e_arm)
         wa.control(t, float(getattr(pol, "rho", np.nan)), t_s)
         if nbins:
             b = min(int(t / cfg.timeseries_bin_us), nbins - 1)
@@ -329,10 +345,11 @@ def simulate_run(policy, workload, cfg: SimRunConfig | None = None, *,
         schedule=sched.descriptor() if sched is not None else "",
         wakeups=wakeups, cycles=len(bus), busy_tries=busy_tries,
         items=serviced, offered=offered, dropped=dropped,
-        awake_ns=int(awake_us * 1e3), started_ns=0,
-        stopped_ns=int(cfg.duration_us * 1e3),
+        awake_ns=round(awake_us * 1e3), started_ns=0,
+        stopped_ns=round(cfg.duration_us * 1e3),
         latency_us=lat,
         latency_area_us=lat_area,
+        energy_uj=energy_uj,
         windows=wa.series(cfg),
         per_queue=[QueueStats(queue=q,
                               offered=int(offered_q[q]),
@@ -380,6 +397,10 @@ def _simulate_spin(policy, workload, cfg: SimRunConfig) -> RunStats:
     policy.reset()
     q_cap = cfg.queue_capacity * max(int(cfg.n_queues), 1)
     n_threads = max(policy.threads, 1)
+    # a spinner never sleeps: flat active burn at the DVFS busy scale
+    # (a pinned-turbo core), no C-state or transition component at all
+    em = cfg.energy_model
+    spin_power_w = float(em.active_energy_uj(1.0, spin=True)) * n_threads
     step = 10.0
     t = 0.0
     offered = dropped = serviced = 0
@@ -424,7 +445,8 @@ def _simulate_spin(policy, workload, cfg: SimRunConfig) -> RunStats:
         # adaptation benchmark's busy-poll verdict asserts); latency area
         # includes the drain position like the aggregate override
         wa.add(t, offered=n, served=do, awake=step * n_threads,
-               lat_area=backlog * step + do / cfg.service_rate_mpps)
+               lat_area=backlog * step + do / cfg.service_rate_mpps,
+               energy_uj=spin_power_w * step)
         t += step
     mean_lat = lat_num / max(serviced, 1)
     sched = cfg.schedule or getattr(workload, "schedule", None)
@@ -436,11 +458,12 @@ def _simulate_spin(policy, workload, cfg: SimRunConfig) -> RunStats:
         wakeups=0, cycles=1, busy_tries=0,
         items=serviced, offered=offered, dropped=dropped,
         # every spinning thread burns its whole core
-        awake_ns=int(cfg.duration_us * 1e3) * n_threads,
+        awake_ns=round(cfg.duration_us * 1e3) * n_threads,
         started_ns=0,
-        stopped_ns=int(cfg.duration_us * 1e3),
+        stopped_ns=round(cfg.duration_us * 1e3),
         latency_us=Reservoir(4, seed=cfg.seed),
         latency_area_us=lat_num + serviced / cfg.service_rate_mpps,
+        energy_uj=spin_power_w * cfg.duration_us,
         windows=wa.series(cfg),
         latency_override={
             "mean": float(mean_lat + 1.0 / cfg.service_rate_mpps),

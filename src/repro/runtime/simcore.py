@@ -32,6 +32,9 @@ __all__ = [
     "HR_SLEEP_MODEL",
     "NANOSLEEP_MODEL",
     "PERFECT_SLEEP_MODEL",
+    "EnergyModel",
+    "DEFAULT_ENERGY_MODEL",
+    "DEEP_CSTATE_ENERGY_MODEL",
     "SimRunConfig",
     "FleetConfig",
     "EngineSetup",
@@ -54,6 +57,12 @@ class SleepModel:
     mean backlogs < 1024 descriptors; the paper still lost 3.9% at a 4096
     ring, implying rare multi-hundred-us pile-ups).  Tail parameters chosen
     so the q=1024..4096 loss ladder brackets the paper's.
+
+    Energy accounting (``EnergyModel``) deliberately ignores this model's
+    overshoot: the C-state and charged residency come from the *target*
+    (the programmed timer — what a next-timer-event cpuidle governor
+    sees), so timer noise is unpaid time in the already-chosen state, a
+    second-order correction folded into the model error.
     """
 
     base_us: float
@@ -76,6 +85,111 @@ HR_SLEEP_MODEL = SleepModel(base_us=2.8, slope=0.027, sigma_us=0.5)
 NANOSLEEP_MODEL = SleepModel(base_us=57.5, slope=0.003, sigma_us=3.0,
                              tail_prob=0.01, tail_mean_us=400.0)
 PERFECT_SLEEP_MODEL = SleepModel(base_us=0.0, slope=0.0, sigma_us=0.0)
+
+
+@dataclass(frozen=True)
+class EnergyModel:
+    """C-state/DVFS package power model (W x us = uJ), charged
+    identically by every execution layer.
+
+    Three components:
+
+      - **active**: ``active_power_w`` per awake microsecond (wake cost
+        plus service time).  The busy-poll spin model additionally
+        multiplies by ``dvfs_busy_scale`` — a spinning core pins its
+        turbo frequency while a duty-cycled Metronome core can downclock
+        between bursts.
+      - **sleep**: every time a thread arms a sleep with target ``T``
+        the core enters the *deepest* C-state whose
+        ``min_residency_us <= T`` and is charged that state's
+        ``power_w * T``.  This is the next-timer-event governor
+        approximation (Linux cpuidle menu/teo): the state is picked from
+        the *programmed* timer (T_S or T_L), not the realized residency,
+        so timer overshoot (``SleepModel``) is unpaid noise in the
+        already-chosen state.  Short targets stay in a shallow state —
+        the minimum-residency thresholds are what make rapid polling
+        energy-expensive even when its CPU looks cheap.
+      - **transition**: each arm additionally pays the chosen state's
+        ``transition_uj`` (entry + exit energy of one wake cycle).
+
+    ``sleep_states`` holds ``(power_w, transition_uj, min_residency_us)``
+    tuples; they are normalized shallow-to-deep at construction and the
+    shallowest must have threshold 0 so every target lands somewhere.
+    Deep states trade a lower power floor for higher per-wake transition
+    energy and a residency floor — which is why the energy-optimal
+    (T_S, T_L) sits at *longer* sleeps than the CPU-optimal point (see
+    ``build_operating_table(objective="energy")``): per-thread sleep
+    power scales with ``m * P(T_S)`` while CPU's wake overhead scales
+    with ``m / T_S``, so the two objectives rank operating points
+    differently.
+
+    Accounting convention shared by the engines: energy is charged at
+    arm time (a sleep still pending at run end was charged when armed),
+    T_S-class arms are empty claims plus drain-end releases, T_L-class
+    arms are blocked wakes (``busy_tries``).
+    """
+
+    active_power_w: float = 10.0
+    # (power_w, transition_uj, min_residency_us), shallow -> deep
+    sleep_states: tuple = ((1.5, 0.5, 0.0),
+                           (0.6, 4.0, 30.0),
+                           (0.25, 15.0, 300.0))
+    dvfs_busy_scale: float = 1.0
+
+    def __post_init__(self):
+        states = tuple(sorted(
+            (tuple(float(x) for x in s) for s in self.sleep_states),
+            key=lambda s: s[2]))
+        if not states or states[0][2] > 0.0:
+            raise ValueError(
+                "EnergyModel.sleep_states needs a shallow state with "
+                "min_residency_us == 0 so every sleep target lands "
+                "somewhere")
+        if any(len(s) != 3 for s in states):
+            raise ValueError("sleep_states entries must be "
+                             "(power_w, transition_uj, min_residency_us)")
+        object.__setattr__(self, "sleep_states", states)
+
+    def params(self) -> tuple:
+        """Hashable static parameters for the jit-compiled kernels."""
+        return (float(self.active_power_w), float(self.dvfs_busy_scale),
+                self.sleep_states)
+
+    def select(self, target_us: float) -> tuple:
+        """``(power_w, transition_uj)`` of the deepest C-state whose
+        minimum residency fits the programmed sleep target."""
+        p_w, t_uj = self.sleep_states[0][0], self.sleep_states[0][1]
+        for pw, tuj, thr_us in self.sleep_states[1:]:
+            if target_us >= thr_us:
+                p_w, t_uj = pw, tuj
+        return p_w, t_uj
+
+    def arm_energy_uj(self, target_us: float) -> float:
+        """Sleep + transition energy of ONE armed sleep of the given
+        target: deepest-fitting state's power x target + its
+        transition."""
+        p_w, t_uj = self.select(float(target_us))
+        return p_w * float(target_us) + t_uj
+
+    def active_energy_uj(self, awake_us, *, spin: bool = False):
+        """Energy of awake time; ``spin=True`` applies the DVFS busy
+        scale (busy-poll cores pin their max frequency)."""
+        scale = self.dvfs_busy_scale if spin else 1.0
+        return self.active_power_w * scale * np.asarray(
+            awake_us, dtype=np.float64)
+
+
+DEFAULT_ENERGY_MODEL = EnergyModel()
+# Aggressive deep-sleep part: much lower floor power behind much larger
+# transition costs and residency thresholds — the regime where the
+# energy-optimal (T_S, T_L) visibly diverges from the CPU-optimal point
+# (benchmarks/power.py pins that divergence).
+DEEP_CSTATE_ENERGY_MODEL = EnergyModel(
+    active_power_w=10.0,
+    sleep_states=((2.0, 0.2, 0.0),
+                  (0.3, 10.0, 40.0),
+                  (0.12, 30.0, 400.0)),
+    dvfs_busy_scale=1.25)
 
 
 @dataclass(frozen=True)
@@ -112,6 +226,10 @@ class SimRunConfig:
     # cross-backend adaptation-tracking surface (unlike
     # timeseries_bin_us, which stays event-engine-only).
     window_us: float = 0.0
+    # C-state/DVFS power accounting, charged by every engine with the
+    # same arm-time convention (see EnergyModel) and surfaced as
+    # RunStats.energy_uj / energy_per_packet_nj.
+    energy_model: EnergyModel = DEFAULT_ENERGY_MODEL
 
     @property
     def is_noisy(self) -> bool:
@@ -329,13 +447,23 @@ class WindowAccum:
 
     Inactive (every call a no-op) when ``cfg.window_us == 0`` — the
     engines call unconditionally and pay nothing on stationary runs.
+
+    Contributions at event times past ``duration_us`` (the event
+    engine's final-drain pass) go to the ``spill_*`` scalars, NOT the
+    last window: the batched in-scan accumulator never runs past
+    duration, so clamping drain events into the last window would skew
+    windowed parity one-sidedly while silently dropping them would
+    break the windows-sum-to-totals conservation law.
     """
 
-    __slots__ = ("window_us", "n", "offered", "served", "lat_area",
-                 "awake", "rho_sum", "rho_cnt", "ts_sum", "samples")
+    __slots__ = ("window_us", "duration_us", "n", "offered", "served",
+                 "lat_area", "awake", "energy", "rho_sum", "rho_cnt",
+                 "ts_sum", "samples", "spill_offered", "spill_served",
+                 "spill_lat_area", "spill_awake", "spill_energy")
 
     def __init__(self, cfg: SimRunConfig):
         self.window_us = float(cfg.window_us)
+        self.duration_us = float(cfg.duration_us)
         self.n = (int(np.ceil(cfg.duration_us / cfg.window_us))
                   if cfg.window_us > 0 else 0)
         n = max(self.n, 1)
@@ -343,28 +471,43 @@ class WindowAccum:
         self.served = np.zeros(n)
         self.lat_area = np.zeros(n)
         self.awake = np.zeros(n)
+        self.energy = np.zeros(n)
         self.rho_sum = np.zeros(n)
         self.rho_cnt = np.zeros(n)
         self.ts_sum = np.zeros(n)
         self.samples: list[list[float]] = [[] for _ in range(n)]
+        self.spill_offered = 0.0
+        self.spill_served = 0.0
+        self.spill_lat_area = 0.0
+        self.spill_awake = 0.0
+        self.spill_energy = 0.0
 
     def _idx(self, t_us: float) -> int:
         return min(max(int(t_us / self.window_us), 0), self.n - 1)
 
     def add(self, t_us: float, *, offered=0.0, served=0.0, lat_area=0.0,
-            awake=0.0) -> None:
+            awake=0.0, energy_uj=0.0) -> None:
         if not self.n:
+            return
+        if t_us >= self.duration_us:
+            self.spill_offered += offered
+            self.spill_served += served
+            self.spill_lat_area += lat_area
+            self.spill_awake += awake
+            self.spill_energy += energy_uj
             return
         i = self._idx(t_us)
         self.offered[i] += offered
         self.served[i] += served
         self.lat_area[i] += lat_area
         self.awake[i] += awake
+        self.energy[i] += energy_uj
 
     def control(self, t_us: float, rho: float, ts_us: float) -> None:
         """One controller sample (rho estimate + current T_S) — call on
-        each primary wake; NaN rho (no estimator) is skipped."""
-        if not self.n or not np.isfinite(rho):
+        each primary wake; NaN rho (no estimator) and post-duration
+        (final-drain) samples are skipped."""
+        if not self.n or not np.isfinite(rho) or t_us >= self.duration_us:
             return
         i = self._idx(t_us)
         self.rho_sum[i] += rho
@@ -372,7 +515,7 @@ class WindowAccum:
         self.ts_sum[i] += ts_us
 
     def latency_samples(self, t_us: float, values) -> None:
-        if not self.n:
+        if not self.n or t_us >= self.duration_us:
             return
         self.samples[self._idx(t_us)].extend(values)
 
@@ -388,8 +531,14 @@ class WindowAccum:
             service_rate_mpps=cfg.service_rate_mpps,
             offered=self.offered, served=self.served,
             lat_area_us=self.lat_area, awake_us=self.awake,
+            energy_uj=self.energy,
             rho_sum=self.rho_sum, rho_cnt=self.rho_cnt,
-            ts_sum=self.ts_sum, p99_latency_us=p99)
+            ts_sum=self.ts_sum, p99_latency_us=p99,
+            spill_offered=self.spill_offered,
+            spill_served=self.spill_served,
+            spill_lat_area_us=self.spill_lat_area,
+            spill_awake_us=self.spill_awake,
+            spill_energy_uj=self.spill_energy)
 
 
 def queue_reservoirs(cfg: SimRunConfig, n_queues: int) -> list[Reservoir]:

@@ -213,12 +213,18 @@ class WindowedSeries:
       - ``lat_area_us``  queue-depth integral accrued in the window
         (packet*us) — ``mean_latency_us`` is its Little's-law ratio;
       - ``awake_us``  poller CPU charged in the window;
+      - ``energy_uj``  EnergyModel charge accrued in the window
+        (active + sleep-arm + transition components);
       - ``rho_sum`` / ``rho_cnt``  controller load-estimate samples
         (one per primary wake; zero count = no estimator, e.g. the
         batched engine's static points or busy polling);
       - ``ts_sum``  the controller's T_S at those samples;
       - ``p99_latency_us``  per-window sampled p99 (NaN where the
-        backend keeps no samples, e.g. the batched engine).
+        backend keeps no samples, e.g. the batched engine);
+      - ``spill_*``  scalar contributions at event times past the run
+        duration (the event engine's final-drain pass; always 0 from
+        the batched engines, whose scan stops at duration).  Window
+        sums plus spill equal the run totals — the conservation law.
     """
 
     window_us: float
@@ -227,14 +233,20 @@ class WindowedSeries:
     served: np.ndarray
     lat_area_us: np.ndarray
     awake_us: np.ndarray
+    energy_uj: np.ndarray = field(default_factory=_empty)
     rho_sum: np.ndarray = field(default_factory=_empty)
     rho_cnt: np.ndarray = field(default_factory=_empty)
     ts_sum: np.ndarray = field(default_factory=_empty)
     p99_latency_us: np.ndarray = field(default_factory=_empty)
+    spill_offered: float = 0.0
+    spill_served: float = 0.0
+    spill_lat_area_us: float = 0.0
+    spill_awake_us: float = 0.0
+    spill_energy_uj: float = 0.0
 
     def __post_init__(self):
         n = len(self.offered)
-        for f in ("rho_sum", "rho_cnt", "ts_sum"):
+        for f in ("energy_uj", "rho_sum", "rho_cnt", "ts_sum"):
             if getattr(self, f).size == 0:
                 setattr(self, f, np.zeros(n))
         if self.p99_latency_us.size == 0:
@@ -262,6 +274,11 @@ class WindowedSeries:
     @property
     def cpu_fraction(self) -> np.ndarray:
         return self.awake_us / max(self.window_us, 1e-9)
+
+    @property
+    def power_w(self) -> np.ndarray:
+        """Mean package power per window (uJ over us is W)."""
+        return self.energy_uj / max(self.window_us, 1e-9)
 
     @property
     def offered_mpps(self) -> np.ndarray:
@@ -300,7 +317,9 @@ class WindowedSeries:
             raise ValueError("cannot merge WindowedSeries on different "
                              "window grids")
         for f in ("offered", "served", "lat_area_us", "awake_us",
-                  "rho_sum", "rho_cnt", "ts_sum"):
+                  "energy_uj", "rho_sum", "rho_cnt", "ts_sum",
+                  "spill_offered", "spill_served", "spill_lat_area_us",
+                  "spill_awake_us", "spill_energy_uj"):
             setattr(self, f, getattr(self, f) + getattr(other, f))
         with warnings.catch_warnings():
             warnings.simplefilter("ignore", RuntimeWarning)
@@ -523,6 +542,11 @@ class RunStats:
     # by roughly (1+rho) at load; use ``mean_sojourn_us`` to compare
     # engines or backends on the same quantity
     latency_area_us: float = 0.0
+    # EnergyModel charge of the run (active + sleep-arm + transition
+    # components, see SimRunConfig.energy_model).  Simulation engines
+    # account it exactly; the threaded Runtime/Server backends fill a
+    # model-based estimate from their wake/awake counters.
+    energy_uj: float = 0.0
     # real-time replay only: worst lateness of the arrival generator vs
     # the workload's schedule.  >> mean inter-arrival gap means the host
     # could not source the workload and the run is NOT sim-comparable.
@@ -570,6 +594,17 @@ class RunStats:
         """Cores the co-run application load actually got (0 when none
         was installed)."""
         return self.app_cpu_ns / self.duration_ns
+
+    @property
+    def energy_per_packet_nj(self) -> float:
+        """Package energy per serviced packet (nJ) — the per-packet
+        cost metric the power-proportionality claims are judged on."""
+        return 1e3 * self.energy_uj / max(self.items, 1)
+
+    @property
+    def mean_power_w(self) -> float:
+        """Mean package power over the wall window (uJ / us = W)."""
+        return self.energy_uj / (self.duration_ns / 1e3)
 
     @property
     def serviced(self) -> int:
@@ -645,7 +680,7 @@ class RunStats:
         """
         for f in ("wakeups", "cycles", "busy_tries", "items", "offered",
                   "dropped", "awake_ns", "app_ops", "app_cpu_ns",
-                  "drain_truncations", "latency_area_us"):
+                  "drain_truncations", "latency_area_us", "energy_uj"):
             setattr(self, f, getattr(self, f) + getattr(other, f))
         self.started_ns = min(self.started_ns, other.started_ns)
         self.stopped_ns = max(self.stopped_ns, other.stopped_ns)
@@ -731,7 +766,7 @@ class RunStats:
         items_w = [self.items] + [o.items for o in others]
         for f in ("wakeups", "cycles", "busy_tries", "items", "offered",
                   "dropped", "awake_ns", "app_ops", "app_cpu_ns",
-                  "drain_truncations", "latency_area_us"):
+                  "drain_truncations", "latency_area_us", "energy_uj"):
             setattr(self, f,
                     getattr(self, f) + sum(getattr(o, f) for o in others))
         self.started_ns = min(self.started_ns,
@@ -826,6 +861,9 @@ class RunStats:
             "serviced": self.items, "offered": self.offered,
             "dropped": self.dropped, "loss_fraction": self.loss_fraction,
             "cpu_fraction": self.cpu_fraction,
+            "energy_uj": self.energy_uj,
+            "energy_per_packet_nj": self.energy_per_packet_nj,
+            "mean_power_w": self.mean_power_w,
             "mean_latency_us": self.mean_latency_us,
             "mean_sojourn_us": self.mean_sojourn_us,
             "p99_latency_us": self.p99_latency_us,

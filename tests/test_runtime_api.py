@@ -109,6 +109,7 @@ def test_policy_instance_reusable_across_backends():
 # Pinned pre-refactor outputs: simulate_run with n_queues=1 and the default
 # round-robin dispatcher must reproduce the original single-queue event
 # sequence bit for bit (same seed => same wakeups/cycles/drops/vacations).
+# awake_ns values pin round()-based us->ns conversion (not truncation).
 _SINGLE_QUEUE_GOLDENS = [
     (
         lambda: MetronomePolicy(MetronomeConfig(m=3, v_target_us=10.0,
@@ -126,7 +127,7 @@ _SINGLE_QUEUE_GOLDENS = [
         lambda: SimRunConfig(duration_us=150_000.0, seed=11,
                              queue_capacity=512),
         dict(wakeups=4764, cycles=4069, busy_tries=695, serviced=1196066,
-             offered=1308145, dropped=112079, awake_ns=44954389,
+             offered=1308145, dropped=112079, awake_ns=44954390,
              mean_vac=26.98560342251278, mean_busy=9.877215479220014),
     ),
     (
@@ -137,7 +138,7 @@ _SINGLE_QUEUE_GOLDENS = [
                              interference_mean_us=50.0,
                              stall_rate_per_us=0.0001, stall_mean_us=100.0),
         dict(wakeups=18231, cycles=13610, busy_tries=4621, serviced=200139,
-             offered=200139, dropped=0, awake_ns=24956100,
+             offered=200139, dropped=0, awake_ns=24956101,
              mean_vac=6.85276468234786, mean_busy=0.49412937593325584),
     ),
 ]

@@ -179,12 +179,16 @@ def test_event_engine_windows_conserve_totals_and_track_load():
                       PoissonWorkload(0.5 * 29.76), cfg)
     w = rs.windows
     assert w is not None and w.n_windows == 20
-    # conservation: windowed sums equal the run totals
-    assert w.offered.sum() == pytest.approx(rs.offered)
-    assert w.served.sum() == pytest.approx(rs.items)
-    assert w.awake_us.sum() * 1e3 == pytest.approx(rs.awake_ns, rel=1e-6)
-    assert w.lat_area_us.sum() == pytest.approx(rs.latency_area_us,
-                                                rel=1e-6)
+    # conservation: windowed sums (plus the post-duration spill, e.g.
+    # the final drain) equal the run totals
+    assert w.offered.sum() + w.spill_offered == pytest.approx(rs.offered)
+    assert w.served.sum() + w.spill_served == pytest.approx(rs.items)
+    assert (w.awake_us.sum() + w.spill_awake_us) * 1e3 \
+        == pytest.approx(rs.awake_ns, rel=1e-6, abs=1e3)
+    assert w.lat_area_us.sum() + w.spill_lat_area_us \
+        == pytest.approx(rs.latency_area_us, rel=1e-6)
+    assert w.energy_uj.sum() + w.spill_energy_uj \
+        == pytest.approx(rs.energy_uj, rel=1e-6)
     # true rho follows the schedule; the EWMA estimate tracks it
     assert w.rho_true[:10].mean() == pytest.approx(0.5 * 0.4, rel=0.15)
     assert w.rho_true[10:].mean() == pytest.approx(0.5 * 1.2, rel=0.15)

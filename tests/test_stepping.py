@@ -62,15 +62,22 @@ def _check_invariants(bs, cfg, stepping):
     assert np.all(bs.awake_us >= 0.0)
     assert np.all(bs.awake_us <= m * cfg.duration_us * (1.0 + 1e-6))
     # 4. windowed series sums match run totals (same accumulators,
-    # binned): offered / served / lat_area / awake columns
-    assert bs.win.shape[0] == n and bs.win.shape[2] == 4
+    # binned): offered / served / lat_area / awake / energy columns
+    assert bs.win.shape[0] == n and bs.win.shape[2] == 5
     for col, name in ((0, "offered"), (1, "serviced"), (2, "lat_area"),
-                      (3, "awake_us")):
+                      (3, "awake_us"), (4, "energy_uj")):
         tot = getattr(bs, name)
         wsum = bs.win[:, :, col].sum(axis=1)
         assert np.all(np.abs(wsum - tot)
                       <= CONS_REL * np.maximum(np.abs(tot), 1.0) + 1.0), \
             (name, wsum, tot)
+    # 5. ns/us unit conversion in to_run_stats rounds (never truncates):
+    # converting back must land within half an ns, not a full one
+    for i in (0, n - 1):
+        rs = bs.to_run_stats(i)
+        assert abs(rs.awake_ns / 1e3 - float(bs.awake_us[i])) <= 5.1e-4
+        assert abs(rs.stopped_ns / 1e3 - cfg.duration_us) <= 5.1e-4
+        assert rs.energy_uj == pytest.approx(float(bs.energy_uj[i]))
     # diagnostics are well-formed
     assert np.all(bs.n_steps >= 1)
     assert np.all(bs.n_steps <= bs.scan_len)
